@@ -1,0 +1,53 @@
+"""Paper Fig 4: candidate evaluations the ML-based search needs per size
+(including the large multi-pass FFT spaces where BO shines)."""
+from __future__ import annotations
+
+from benchmarks.common import NOISE
+from repro.core import (BayesianTuner, CachedObjective, ExhaustiveSearch,
+                        RandomSearch, TPUCostModelObjective, Workload,
+                        build_space)
+from repro.core.multikernel import MultiPassObjective
+
+
+def run(emit) -> None:
+    cases = [("tridiag", "wm", [64, 128, 256, 512, 1024]),
+             ("scan", "lf", [64, 128, 256, 512, 1024, 2048, 4096]),
+             ("fft", "stockham", [64, 256, 1024, 4096])]
+    for op, variant, sizes in cases:
+        for n in sizes:
+            wl = Workload(op=op, n=n, batch=max(2**26 // n, 1),
+                          variant=variant)
+            space = build_space(wl)
+            bo = BayesianTuner(seed=0).tune(
+                space, CachedObjective(TPUCostModelObjective(noise=NOISE)))
+            emit(f"fig4,{op},{variant},{n},bayesian,evals,"
+                 f"{bo.evaluations},{space.size()}")
+
+    # fig 4d: large FFT multi-pass spaces
+    for n in [2**13, 2**16, 2**19, 2**20, 2**23]:
+        wl = Workload(op="large_fft", n=n, batch=max(2**26 // n, 1),
+                      variant="stockham")
+        space = build_space(wl)
+        bo = BayesianTuner(seed=0).tune(
+            space, CachedObjective(MultiPassObjective(
+                TPUCostModelObjective(noise=NOISE))))
+        emit(f"fig4d,large_fft,stockham,{n},bayesian,evals,"
+             f"{bo.evaluations},{space.size()}")
+
+    # search-quality control: BO vs random at matched budgets (one size)
+    wl = Workload(op="scan", n=1024, batch=2**16, variant="lf")
+    space = build_space(wl)
+    ex = ExhaustiveSearch().tune(
+        space, CachedObjective(TPUCostModelObjective(noise=NOISE)))
+    for seed in range(5):
+        bo = BayesianTuner(seed=seed).tune(
+            space, CachedObjective(TPUCostModelObjective(noise=NOISE)))
+        rnd = RandomSearch(max_evals=bo.evaluations, seed=seed).tune(
+            space, CachedObjective(TPUCostModelObjective(noise=NOISE)))
+        emit(f"fig4-control,scan,lf,1024,bo_vs_random_seed{seed},eff,"
+             f"{min(ex.best_time/bo.best_time,1.0):.4f},"
+             f"{min(ex.best_time/rnd.best_time,1.0):.4f}")
+
+
+if __name__ == "__main__":
+    run(print)

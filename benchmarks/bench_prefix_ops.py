@@ -1,0 +1,94 @@
+"""Paper Figs 5/6/7/8 + Table II: per-op throughput under each tuning
+methodology, with Phi vs the exhaustive optimum.
+
+Emits CSV rows: table,op,variant,N,method,metric,value,evals
+  * device-model throughput for the full paper batch (2^26/N problems);
+  * host wall-clock throughput for the tuned kernels at host-sized batches
+    (the empirical cross-check this container can actually measure);
+  * Table II rows: average throughput + Phi per (op, methodology).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (HOST_ELEMS, NOISE, gflops_fft, mdata_per_s,
+                               median_time, mrows_per_s, tune_all_methods)
+from repro.configs.paper_ops import PREFIX_OPS, TOTAL_ELEMS
+from repro.core import Workload
+from repro.core.metrics import phi
+
+METRIC = {"tridiag": ("MRows/s", mrows_per_s),
+          "scan": ("MData/s", mdata_per_s),
+          "fft": ("GFlops/s", gflops_fft),
+          "large_fft": ("GFlops/s", gflops_fft)}
+
+
+def _host_thunk(op: str, variant: str, n: int, batch: int, cfg: Dict):
+    """Build a jitted host executable for the tuned op (XLA paths)."""
+    rng = np.random.default_rng(0)
+    if op == "scan":
+        from repro.kernels.scan.ref import scan_add_ref
+        x = jnp.asarray(rng.normal(size=(batch, n)), jnp.float32)
+        f = jax.jit(scan_add_ref)
+        f(x).block_until_ready()
+        return lambda: f(x).block_until_ready()
+    if op == "tridiag":
+        from repro.kernels.tridiag import ops as tops
+        from repro.kernels.tridiag.ref import random_system
+        a, b, c, d = random_system(jax.random.PRNGKey(0), batch, n)
+        f = jax.jit(lambda a, b, c, d: tops.solve(a, b, c, d,
+                                                  variant=variant, config=cfg))
+        f(a, b, c, d).block_until_ready()
+        return lambda: f(a, b, c, d).block_until_ready()
+    # fft / large_fft: pure-jnp stockham (host XLA), radix from config
+    from repro.kernels.fft.ref import stockham_jnp
+    x = jnp.asarray(rng.normal(size=(batch, n))
+                    + 1j * rng.normal(size=(batch, n)), jnp.complex64)
+    radix = cfg.get("radix", 2)
+    f = jax.jit(lambda x: stockham_jnp(x, radix))
+    f(x).block_until_ready()
+    return lambda: f(x).block_until_ready()
+
+
+def run(emit, host_wallclock: bool = True) -> None:
+    fig_of = {"tridiag": "fig5", "scan": "fig6", "fft": "fig7",
+              "large_fft": "fig8"}
+    table2: List[str] = []
+    for op, spec in PREFIX_OPS.items():
+        unit, metric = METRIC[op]
+        for variant in spec["variants"]:
+            effs = {"analytical": [], "bayesian": []}
+            perfs = {"analytical": [], "bayesian": [], "exhaustive": []}
+            for n in spec["sizes"]:
+                batch = max(TOTAL_ELEMS // n, 1)
+                wl = Workload(op=op, n=n, batch=batch, variant=variant)
+                res = tune_all_methods(wl)
+                for method, r in res.items():
+                    val = metric(n, batch, r["time_s"])
+                    emit(f"{fig_of[op]},{op},{variant},{n},{method},"
+                         f"{unit},{val:.2f},{r['evals']}")
+                    perfs.setdefault(method, []).append(val)
+                    if method != "exhaustive":
+                        effs[method].append(r["efficiency"])
+                if host_wallclock and op != "large_fft" and n <= 4096:
+                    hb = max(HOST_ELEMS // n, 1)
+                    cfg = res["bayesian"]["config"]
+                    t = median_time(_host_thunk(op, variant, n, hb, cfg))
+                    emit(f"{fig_of[op]}-host,{op},{variant},{n},host_xla,"
+                         f"{unit},{metric(n, hb, t):.2f},0")
+            for method in ("analytical", "bayesian"):
+                avg = float(np.mean(perfs[method]))
+                table2.append(
+                    f"table2,{op},{variant},avg,{method},{unit},"
+                    f"{avg:.2f},{phi(effs[method]):.4f}")
+    for row in table2:
+        emit(row)
+
+
+if __name__ == "__main__":
+    run(print)

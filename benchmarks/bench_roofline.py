@@ -1,0 +1,38 @@
+"""Roofline-table benchmark: summarizes the dry-run artifacts into CSV
+(reads artifacts/roofline/*.json — run launch.roofline --all first; cells
+missing artifacts are reported as such rather than recomputed, since each
+compile takes minutes)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES, all_archs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "roofline")
+
+
+def run(emit) -> None:
+    for arch in all_archs():
+        for shape in SHAPES:
+            path = os.path.join(ART, f"{arch}_{shape}_16x16.json")
+            if not os.path.exists(path):
+                emit(f"roofline,{arch},{shape},missing,,,,")
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") == "skipped":
+                emit(f"roofline,{arch},{shape},skipped,,,,")
+                continue
+            if rec.get("status") != "ok":
+                emit(f"roofline,{arch},{shape},failed,,,,")
+                continue
+            t = rec["roofline"]
+            emit(f"roofline,{arch},{shape},ok,"
+                 f"{t['compute_s']*1e3:.2f},{t['memory_s']*1e3:.2f},"
+                 f"{t['collective_s']*1e3:.2f},{rec['dominant']}"
+                 f",{rec.get('mfu_upper_bound', 0):.3f}")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,74 @@
+"""Shared benchmark utilities.
+
+Two measurement modes per the paper's protocol:
+  * device model — the TPUCostModelObjective timing (offline target);
+  * host wall-clock — jitted XLA-CPU execution of the real kernels,
+    median over repeats (genuine empirical numbers on this machine).
+
+Throughput metrics follow the paper: tridiagonal MRows/s = N*b/t*1e-6;
+scan MData/s; FFT GFlops/s = 5*N*log2(N)*b/t*1e-9. Batch = 2^26/N
+("TOTAL_ELEMS") unless host memory forces a smaller scaled batch, in which
+case the scale factor is reported.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AnalyticalTuner, BayesianTuner, CachedObjective,
+                        ExhaustiveSearch, TPUCostModelObjective, Workload,
+                        build_space)
+
+HOST_ELEMS = 2 ** 20        # host-sized "2^26" stand-in (CPU wall-clock)
+NOISE = 0.02                # cost-model jitter ~ the paper's run-to-run 2%
+
+
+def median_time(thunk: Callable[[], None], reps: int = 5,
+                warmup: int = 2) -> float:
+    for _ in range(warmup):
+        thunk()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        thunk()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def tune_all_methods(wl: Workload, seed: int = 0) -> Dict[str, Dict]:
+    """Run exhaustive + analytical + BO on the device model; returns per-
+    method {config, time_s, evals, efficiency}."""
+    space = build_space(wl)
+    obj = CachedObjective(TPUCostModelObjective(noise=NOISE))
+    ex = ExhaustiveSearch().tune(space, obj)
+    ana_cfg = AnalyticalTuner().suggest(space)
+    t_ana = obj(space, ana_cfg).time_s
+    bo = BayesianTuner(seed=seed).tune(
+        space, CachedObjective(TPUCostModelObjective(noise=NOISE)))
+    return {
+        "exhaustive": {"config": ex.best_config, "time_s": ex.best_time,
+                       "evals": ex.evaluations, "efficiency": 1.0},
+        "analytical": {"config": ana_cfg, "time_s": t_ana, "evals": 0,
+                       "efficiency": min(ex.best_time / t_ana, 1.0)},
+        "bayesian": {"config": bo.best_config, "time_s": bo.best_time,
+                     "evals": bo.evaluations,
+                     "efficiency": min(ex.best_time / bo.best_time, 1.0)},
+    }
+
+
+def mrows_per_s(n: int, batch: int, t: float) -> float:
+    return n * batch * 1e-6 / t
+
+
+def mdata_per_s(n: int, batch: int, t: float) -> float:
+    return n * batch * 1e-6 / t
+
+
+def gflops_fft(n: int, batch: int, t: float) -> float:
+    return 5.0 * n * math.log2(n) * batch * 1e-9 / t

@@ -1,0 +1,43 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,...`` CSV rows:
+  fig5/fig6/fig7/fig8 — tridiag / scan / FFT / large-FFT throughput per
+      tuning methodology (+ `-host` rows: genuine wall-clock on this host);
+  table2              — average performance + Phi per (op, methodology);
+  fig4 / fig4d        — BO candidate-evaluation counts (+ control vs random);
+  roofline            — per (arch x shape) three-term roofline summary.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: prefix_ops,convergence,roofline")
+    ap.add_argument("--no-host-wallclock", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def emit(row: str) -> None:
+        print(row, flush=True)
+
+    t0 = time.time()
+    emit("table,op,variant,N,method,metric,value,extra")
+    if only is None or "prefix_ops" in only:
+        from benchmarks.bench_prefix_ops import run as run_ops
+        run_ops(emit, host_wallclock=not args.no_host_wallclock)
+    if only is None or "convergence" in only:
+        from benchmarks.bench_convergence import run as run_conv
+        run_conv(emit)
+    if only is None or "roofline" in only:
+        from benchmarks.bench_roofline import run as run_roof
+        run_roof(emit)
+    print(f"# benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

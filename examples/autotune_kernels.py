@@ -1,0 +1,30 @@
+"""The full paper workflow: exhaustive vs analytical vs Bayesian tuning on
+every prefix-op family, with Table-II-style Phi reporting.
+
+    PYTHONPATH=src python examples/autotune_kernels.py
+"""
+import numpy as np
+
+from repro.core import Workload
+from repro.core.metrics import phi
+from benchmarks.common import tune_all_methods
+
+CASES = [("scan", "lf", [128, 256, 512, 1024]),
+         ("scan", "ks", [128, 256, 512, 1024]),
+         ("tridiag", "wm", [64, 128, 256, 512]),
+         ("tridiag", "pcr", [64, 128, 256, 512]),
+         ("fft", "stockham", [64, 256, 1024, 4096])]
+
+print(f"{'op':22s} {'PHI_analytical':>15s} {'PHI_bayesian':>13s} "
+      f"{'BO evals':>9s}")
+for op, variant, sizes in CASES:
+    effs = {"analytical": [], "bayesian": []}
+    evals = []
+    for n in sizes:
+        res = tune_all_methods(
+            Workload(op=op, n=n, batch=max(2**26 // n, 1), variant=variant))
+        effs["analytical"].append(res["analytical"]["efficiency"])
+        effs["bayesian"].append(res["bayesian"]["efficiency"])
+        evals.append(res["bayesian"]["evals"])
+    print(f"{op+'-'+variant:22s} {phi(effs['analytical']):15.4f} "
+          f"{phi(effs['bayesian']):13.4f} {str(evals):>9s}")

@@ -1,0 +1,40 @@
+"""Fault-tolerance demo: a training job killed mid-run by an injected node
+failure auto-resumes from the newest intact checkpoint.
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import shutil
+
+import sys, os
+sys.path.insert(0, os.path.dirname(__file__))
+from train_lm import preset_host
+from repro.data.pipeline import Batcher, DataConfig
+from repro.models.model import build_model
+from repro.train.fault import FaultInjector
+from repro.train.loop import LoopConfig, run_training
+from repro.train.step import TrainHParams
+
+CKPT = "/tmp/fault_demo_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = preset_host()
+hp = TrainHParams(peak_lr=1e-3, warmup_steps=5, total_steps=30, z_weight=0.0)
+loop = LoopConfig(total_steps=30, checkpoint_dir=CKPT, checkpoint_every=10,
+                  log_every=10)
+inj = FaultInjector(fail_at_steps=(17,))
+
+
+def data():
+    return iter(Batcher(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                   global_batch=4)))
+
+
+try:
+    run_training(build_model(cfg), hp, loop, data(), injector=inj)
+except RuntimeError as e:
+    print(f"[fault demo] job died: {e}")
+
+print("[fault demo] restarting (auto-resume from latest checkpoint)...")
+out = run_training(build_model(cfg), hp, loop, data(), injector=inj)
+print(f"[fault demo] resumed from step {out['resumed_from']}, "
+      f"finished at step {out['history'][-1]['step']}")

@@ -1,0 +1,7 @@
+"""repro — TPU-native auto-tuning framework (Dieguez & Amor 2023 reproduction).
+
+Subpackages: core (tuning methodologies), hw (TPU machine model), kernels
+(Pallas TPU kernels), models (architecture zoo), configs, data, optim,
+distributed, train, serve, launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""repro.core — the paper's contribution: tuning methodologies.
+
+Public API:
+  Workload, build_space      — declare what to tune (paper Table I)
+  AnalyticalTuner            — model-driven, zero-evaluation (paper IV-A)
+  BayesianTuner              — BO with GP surrogate + EI (paper IV-B)
+  ExhaustiveSearch, RandomSearch
+  phi, efficiency            — portability metric (paper VI)
+  TuningDB, get_config, tune_offline — offline/online deployment flow
+"""
+from repro.core.analytical import AnalyticalTuner
+from repro.core.bayesian import BayesianTuner, TuneResult
+from repro.core.exhaustive import ExhaustiveSearch, RandomSearch
+from repro.core.metrics import efficiency, phi, phi_from_times
+from repro.core.objective import (CachedObjective, Measurement, Objective,
+                                  PENALTY_TIME, TPUCostModelObjective,
+                                  WallClockObjective)
+from repro.core.space import Config, ParamSpec, SearchSpace, Workload, build_space
+from repro.core.tuner import TuningDB, get_config, global_db, tune_offline
+
+__all__ = [
+    "AnalyticalTuner", "BayesianTuner", "TuneResult", "ExhaustiveSearch",
+    "RandomSearch", "efficiency", "phi", "phi_from_times", "CachedObjective",
+    "Measurement", "Objective", "PENALTY_TIME", "TPUCostModelObjective",
+    "WallClockObjective", "Config", "ParamSpec", "SearchSpace", "Workload",
+    "build_space", "TuningDB", "get_config", "global_db", "tune_offline",
+]

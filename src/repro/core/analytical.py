@@ -1,0 +1,153 @@
+"""Analytical model-driven tuning (paper §IV-A, adapted to TPU per DESIGN.md §2).
+
+Zero-evaluation tuner: scores every valid configuration with an ordinal
+occupancy model and returns the argmax. This is the *online* methodology —
+it answers immediately from architectural reasoning, exactly like the paper's
+guideline answers from the GM20B occupancy table (Fig 3a).
+
+TPU guideline (re-derivation of the paper's four rules):
+  1. Prefer configs achieving BOTH full pipeline overlap (>= OVERLAP_GRID
+     grid programs, double-buffered VMEM fit) AND full lane utilization.
+  2. Else maximize grid parallelism while lane utilization stays in
+     [0.60, 1.00] (the paper's warp-occupancy band).
+  3. Else maximize lane utilization; among ties prefer larger unroll (ILP).
+  4. If the pattern admits a larger radix, prefer it even at reduced grid
+     parallelism (fewer passes/sync points, more ILP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.space import Config, SearchSpace, Workload
+from repro.hw.tpu import V5E, dtype_bytes, lane_utilization, sublane_utilization
+
+OVERLAP_GRID = 4          # grid programs needed for full DMA/compute overlap
+OCCUPANCY_BAND = (0.60, 1.00)
+
+
+@dataclasses.dataclass
+class AnalyticalScore:
+    tier: int              # 3 = rule-1 configs, 2 = rule-2, 1 = rule-3 (higher better)
+    pass_rank: float       # paper §IV-C premise: minimize the number of
+    #                        passes/kernels FIRST (each extra pass is a full
+    #                        HBM roundtrip) — ranks above the radix choice
+    radix_rank: float      # rule 4
+    block_rank: float      # TPU adaptation of the paper's Ba maximization:
+    #                        once >= OVERLAP_GRID programs keep the pipeline
+    #                        full, BIGGER DMA blocks win (grid programs are
+    #                        sequential per core, unlike CUDA blocks/SM)
+    occupancy: float
+    ilp_rank: float
+
+    def key(self) -> Tuple:
+        # Lexicographic: tier, then pass count (§IV-C), then radix (rule 4
+        # overrides block choice), then the tier-specific objective, then
+        # ILP tie-break.
+        return (self.tier, self.pass_rank, self.radix_rank, self.block_rank,
+                self.occupancy, self.ilp_rank)
+
+
+def _resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
+    wl = space.workload
+    spec = space.spec
+    eb = dtype_bytes(wl.dtype)
+    if wl.op == "tridiag":
+        eb *= 4
+    elif wl.op in ("fft", "large_fft"):
+        eb *= 2
+
+    if wl.op == "attention":
+        grid = max(wl.batch, 1) * max(wl.n // cfg["block_q"], 1)
+        vmem = (cfg["block_q"] + 2 * cfg["block_k"]) * 128 * eb * 2
+        occ = lane_utilization(cfg["block_k"], spec)
+        ilp = cfg.get("unroll", 1)
+        radix = 2
+        passes = 1.0
+        block_bytes = vmem // 2
+    elif wl.op == "matmul":
+        grid = max(wl.batch // cfg["block_m"], 1) * max(wl.n // cfg["block_n"], 1)
+        vmem = (cfg["block_m"] * cfg["block_k"] + cfg["block_k"] * cfg["block_n"]) * eb * 2
+        occ = min(cfg["block_n"] / spec.mxu_dim, 1.0) * min(cfg["block_m"] / spec.mxu_dim, 1.0)
+        ilp = cfg["block_k"] // 128
+        radix = 2
+        passes = 1.0
+        block_bytes = vmem // 2
+    else:
+        tile_n = cfg.get("tile_n", wl.n)
+        rows = cfg.get("rows_per_program", 1)
+        grid = max(max(wl.batch, 1) // rows, 1) * max(wl.n // tile_n, 1)
+        vmem = rows * tile_n * eb * 2
+        trailing = min(tile_n, spec.lane_count * spec.sublane_count)
+        occ = lane_utilization(trailing, spec)
+        # sublane packing of stacked rows also contributes (8-deep VREGs)
+        occ *= max(sublane_utilization(rows, spec), 0.5)
+        ilp = cfg.get("unroll", 1) * (2 if cfg.get("in_register") else 1)
+        radix = cfg.get("radix", 2)
+        passes = max(1.0, math.ceil(math.log(max(wl.n, 2), radix) /
+                                    max(math.log(max(tile_n, 2), radix), 1e-9)))
+        block_bytes = rows * tile_n * eb
+    return {"grid": grid, "vmem": vmem, "occupancy": min(occ, 1.0),
+            "ilp": ilp, "radix": radix, "passes": passes,
+            "block_bytes": block_bytes}
+
+
+def score(space: SearchSpace, cfg: Config) -> AnalyticalScore:
+    res = _resources(space, cfg)
+    spec = space.spec
+    fits = res["vmem"] <= spec.vmem_budget
+    full_overlap = res["grid"] >= OVERLAP_GRID and fits
+    occ = res["occupancy"]
+    lo, hi = OCCUPANCY_BAND
+
+    if full_overlap and occ >= 0.999:
+        tier = 3
+    elif fits and lo <= occ <= hi:
+        tier = 2
+    elif fits:
+        tier = 1
+    else:
+        tier = 0
+
+    # rule 4: larger radix preferred when it cuts passes/steps — but only
+    # radices that divide the tile exactly; a mixed-radix circuit needs an
+    # extra odd step and more synchronizations (the paper's own observation
+    # on WM's jagged performance), so the expert ranks every exact radix
+    # above every mixed one.
+    r = res["radix"]
+    tile = cfg.get("tile_n", space.workload.n)
+    k = round(math.log(max(tile, 2), r)) if r > 1 else 1
+    exact = 1 if r ** k == tile else 0
+    radix_rank = exact * 16.0 + math.log2(r)
+    # TPU rule 1/2 objective: biggest DMA block that still leaves the
+    # pipeline >= OVERLAP_GRID programs deep (saturating at 4 MiB, past
+    # which the DMA ramp is flat).
+    if res["grid"] >= OVERLAP_GRID:
+        block_rank = math.log2(min(max(res["block_bytes"], 1), 4 * 2**20))
+    else:
+        block_rank = -1.0   # starves the pipeline: strictly worse
+    return AnalyticalScore(tier, -res["passes"], radix_rank, block_rank, occ,
+                           math.log2(max(res["ilp"], 1)))
+
+
+class AnalyticalTuner:
+    """Ranks the valid space with the guideline; no objective evaluations."""
+
+    name = "analytical"
+
+    def suggest(self, space: SearchSpace) -> Config:
+        best: Optional[Config] = None
+        best_key: Optional[Tuple] = None
+        for cfg in space.enumerate_valid():
+            k = score(space, cfg).key()
+            if best_key is None or k > best_key:
+                best, best_key = cfg, k
+        if best is None:
+            raise ValueError(f"search space for {space.workload.key} has no valid config")
+        return best
+
+    def rank(self, space: SearchSpace, top: int = 5) -> List[Config]:
+        cfgs = space.enumerate_valid()
+        cfgs.sort(key=lambda c: score(space, c).key(), reverse=True)
+        return cfgs[:top]

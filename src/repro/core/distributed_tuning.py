@@ -1,0 +1,109 @@
+"""Beyond-paper: the paper's tuning methodologies applied to DISTRIBUTED
+configuration (sharding strategy, remat, microbatching) with compiled
+roofline terms as the objective.
+
+The paper tunes (S, P, L, r, shuffle) per kernel against wall-clock; at pod
+scale the analogous knobs are per-(arch x shape) distribution choices and
+the "device" is the XLA-compiled module. The objective is the dominant
+roofline term from launch/roofline.py — exactly the quantity §Perf
+hillclimbs — so the same AnalyticalTuner/BayesianTuner/ExhaustiveSearch
+machinery drives the search.
+
+Space (discrete, enumerable — like the paper's):
+    activation_strategy: tp | sp             (residual sharding)
+    micro_steps:         1 | 2 | 4 | 8       (gradient accumulation)
+    remat:               full | none
+    moe_group_size:      512 | 1024 | 2048   (MoE cells only)
+
+The objective evaluates lower+compile per candidate (minutes each — the
+same order as the paper's 100-execution medians), so the BO search's
+evaluation frugality matters here even more than on-kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.bayesian import BayesianTuner, TuneResult
+from repro.core.exhaustive import ExhaustiveSearch
+from repro.core.objective import Measurement, Objective, PENALTY_TIME
+from repro.core.space import Config, ParamSpec, SearchSpace, Workload
+
+
+def distributed_space(arch: str, shape: str, is_moe: bool = False,
+                      is_train: bool = True) -> SearchSpace:
+    wl = Workload(op="distributed", n=0, batch=0, variant=f"{arch}|{shape}")
+    params = [
+        ParamSpec("sp", (0, 1)),                       # activation_strategy
+        ParamSpec("micro_steps", (1, 2, 4, 8) if is_train else (1,)),
+        ParamSpec("remat", (0, 1) if is_train else (1,)),  # 1 = full
+        ParamSpec("moe_group", (512, 1024, 2048) if is_moe else (1024,)),
+    ]
+    return SearchSpace(wl, params, constraints=())
+
+
+HBM_BYTES = 16 * 2**30
+
+
+class CompiledRooflineObjective(Objective):
+    """lower+compile the cell under the candidate distribution config and
+    return the dominant roofline term (seconds); OOM (peak > HBM) and
+    compile failures get the penalty clamp, exactly like the paper's
+    invalid-configuration handling."""
+
+    def __init__(self, multi_pod: bool = False, hbm_guard: bool = True):
+        self.multi_pod = multi_pod
+        self.hbm_guard = hbm_guard
+
+    def __call__(self, space: SearchSpace, cfg: Config) -> Measurement:
+        import dataclasses as dc
+
+        from repro.configs.base import get_arch
+        from repro.launch.roofline import analyze_cell
+        from repro.train.step import TrainHParams
+
+        arch, shape = space.workload.variant.split("|")
+        base = get_arch(arch)
+        arch_cfg = dc.replace(
+            base,
+            activation_strategy="sp" if cfg["sp"] else "tp",
+            remat="full" if cfg["remat"] else "none",
+            moe_group_size=cfg["moe_group"],
+        )
+        hp = TrainHParams(micro_steps=cfg["micro_steps"])
+        try:
+            rec = analyze_cell(arch, shape, multi_pod=self.multi_pod,
+                               arch_cfg=arch_cfg, hp=hp)
+        except Exception:
+            return Measurement(PENALTY_TIME, False)
+        if rec.get("status") != "ok":
+            return Measurement(PENALTY_TIME, False)
+        peak = rec["per_device"]["peak_bytes"]
+        if self.hbm_guard and peak > HBM_BYTES:
+            # infeasible on real hardware -> penalty, scaled so "close"
+            # configs still order (helps the surrogate learn the cliff)
+            return Measurement(PENALTY_TIME * (peak / HBM_BYTES), False,
+                               meta={"peak_bytes": peak})
+        t = rec["step_time_bound_s"] * cfg["micro_steps"] if False else \
+            rec["step_time_bound_s"]
+        return Measurement(
+            t, True,
+            meta={"peak_bytes": peak, **rec["roofline"],
+                  "dominant": rec["dominant"]})
+
+
+def tune_distributed(arch: str, shape: str, method: str = "bayesian",
+                     multi_pod: bool = False, max_evals: int = 12,
+                     seed: int = 0) -> TuneResult:
+    from repro.configs.base import get_arch
+
+    base = get_arch(arch)
+    space = distributed_space(arch, shape, is_moe=base.family == "moe",
+                              is_train=shape.startswith("train"))
+    objective = CompiledRooflineObjective(multi_pod=multi_pod)
+    if method == "bayesian":
+        return BayesianTuner(max_evals=max_evals, seed=seed,
+                             n_init=3).tune(space, objective)
+    if method == "exhaustive":
+        return ExhaustiveSearch().tune(space, objective)
+    raise ValueError(method)

@@ -1,0 +1,59 @@
+"""Exhaustive and random searches (the paper's ground truth + sanity baseline)."""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bayesian import TuneResult
+from repro.core.objective import Objective, PENALTY_TIME
+from repro.core.space import Config, SearchSpace
+
+
+class ExhaustiveSearch:
+    """Evaluates every valid configuration. Guarantees the optimum; used to
+    compute the paper's Phi metric denominators."""
+
+    name = "exhaustive"
+
+    def tune(self, space: SearchSpace, objective: Objective) -> TuneResult:
+        history: List[Tuple[Config, float]] = []
+        best_cfg: Optional[Config] = None
+        best_t = float("inf")
+        for cfg in space.enumerate_valid():
+            m = objective(space, cfg)
+            t = m.time_s if m.valid else PENALTY_TIME
+            history.append((cfg, t))
+            if t < best_t:
+                best_cfg, best_t = cfg, t
+        if best_cfg is None:
+            raise ValueError(f"empty search space for {space.workload.key}")
+        return TuneResult(best_cfg, best_t, len(history), history, "exhausted")
+
+
+class RandomSearch:
+    """Uniform random sampling without replacement — the bar any smarter
+    search must beat (cf. the paper's citation of [35])."""
+
+    name = "random"
+
+    def __init__(self, max_evals: int = 16, seed: int = 0):
+        self.max_evals = max_evals
+        self.seed = seed
+
+    def tune(self, space: SearchSpace, objective: Objective) -> TuneResult:
+        rng = np.random.default_rng(self.seed)
+        candidates = space.enumerate_valid()
+        if not candidates:
+            raise ValueError(f"empty search space for {space.workload.key}")
+        order = rng.permutation(len(candidates))[: self.max_evals]
+        history: List[Tuple[Config, float]] = []
+        best_cfg, best_t = None, float("inf")
+        for idx in order:
+            cfg = candidates[int(idx)]
+            m = objective(space, cfg)
+            t = m.time_s if m.valid else PENALTY_TIME
+            history.append((cfg, t))
+            if t < best_t:
+                best_cfg, best_t = cfg, t
+        return TuneResult(best_cfg, best_t, len(history), history, "max_evals")

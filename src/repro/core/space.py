@@ -1,0 +1,332 @@
+"""Search spaces for kernel performance parameters (paper Table I, TPU-native).
+
+A space is declared per (operation, input-parameters) pair:
+  - Input Parameters (paper: `A`): problem size N, batch G, dtype — they
+    characterize the workload and are NOT searched.
+  - Performance Parameters (paper: `B`): the tunable knobs with power-of-two
+    domains and validity constraints.
+
+`Config` is an immutable mapping knob-name -> value. Spaces are small and
+enumerable (as in the paper), so `enumerate_valid()` is exact and the
+exhaustive search is feasible — that property is what makes the Phi metric
+computable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.hw.tpu import V5E, TpuSpec, dtype_bytes
+
+Config = Dict[str, int]
+
+
+def pow2_range(lo: int, hi: int) -> Tuple[int, ...]:
+    """Inclusive powers of two from lo to hi."""
+    assert lo > 0 and hi >= lo and lo & (lo - 1) == 0 and hi & (hi - 1) == 0
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One Performance Parameter: a named discrete domain."""
+
+    name: str
+    domain: Tuple[int, ...]
+
+    def index_of(self, value: int) -> int:
+        return self.domain.index(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Input Parameters `A`: what problem are we tuning for."""
+
+    op: str                 # "scan" | "tridiag" | "fft" | "ssd" | "attention" | ...
+    n: int                  # problem size (elements per problem / seq length)
+    batch: int = 1          # simultaneous problems (paper: G batches)
+    dtype: str = "float32"
+    variant: str = ""       # e.g. "lf" | "ks" | "wm" | "pcr" | "cr" | "stockham"
+
+    @property
+    def key(self) -> str:
+        return f"{self.op}:{self.variant or 'default'}:n{self.n}:b{self.batch}:{self.dtype}"
+
+
+@dataclasses.dataclass
+class SearchSpace:
+    """Performance Parameters `B` + constraints for one workload."""
+
+    workload: Workload
+    params: Sequence[ParamSpec]
+    constraints: Sequence[Callable[[Config, Workload], bool]] = ()
+    spec: TpuSpec = V5E
+
+    def param(self, name: str) -> ParamSpec:
+        for p in self.params:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+    def is_valid(self, cfg: Config) -> bool:
+        for p in self.params:
+            if cfg.get(p.name) not in p.domain:
+                return False
+        return all(c(cfg, self.workload) for c in self.constraints)
+
+    def enumerate_all(self) -> List[Config]:
+        names = [p.name for p in self.params]
+        out = []
+        for values in itertools.product(*[p.domain for p in self.params]):
+            out.append(dict(zip(names, values)))
+        return out
+
+    def enumerate_valid(self) -> List[Config]:
+        return [c for c in self.enumerate_all() if self.is_valid(c)]
+
+    # --- encoding for the GP surrogate: log2-normalized coordinates ---
+    def encode(self, cfg: Config) -> List[float]:
+        coords = []
+        for p in self.params:
+            dom = p.domain
+            if len(dom) == 1:
+                coords.append(0.0)
+                continue
+            lo, hi = math.log2(dom[0] + 1), math.log2(dom[-1] + 1)
+            coords.append((math.log2(cfg[p.name] + 1) - lo) / (hi - lo))
+        return coords
+
+    def size(self) -> int:
+        return len(self.enumerate_valid())
+
+
+# ---------------------------------------------------------------------------
+# Constraint builders shared by the kernel spaces
+# ---------------------------------------------------------------------------
+
+def vmem_fits(bytes_per_elem: int, buffers: int = 2):
+    """Double-buffered VMEM footprint must fit the budget.
+
+    footprint = rows_per_program * tile_n * bytes_per_elem * buffers
+    The analogue of the paper's 48KB shared-memory-per-block constraint.
+    """
+
+    def check(cfg: Config, wl: Workload) -> bool:
+        tile_n = cfg.get("tile_n", wl.n)
+        rows = cfg.get("rows_per_program", 1)
+        return rows * tile_n * bytes_per_elem * buffers <= V5E.vmem_budget
+
+    return check
+
+
+def tile_divides_n():
+    def check(cfg: Config, wl: Workload) -> bool:
+        tile_n = cfg.get("tile_n", wl.n)
+        return tile_n <= wl.n and wl.n % tile_n == 0
+
+    return check
+
+
+def rows_divide_batch():
+    def check(cfg: Config, wl: Workload) -> bool:
+        rows = cfg.get("rows_per_program", 1)
+        return rows <= max(wl.batch, 1) and max(wl.batch, 1) % rows == 0
+
+    return check
+
+
+def radix_compatible():
+    """radix^k must reach tile_n, and unroll must cover the radix fan-in."""
+
+    def check(cfg: Config, wl: Workload) -> bool:
+        r = cfg.get("radix", 2)
+        tile_n = cfg.get("tile_n", wl.n)
+        if r > tile_n:
+            return False
+        # tile_n must be a power of the radix for a uniform circuit; mixed
+        # radix (paper Fig 5's jagged WM line) is valid but penalized by the
+        # objective, not the space.
+        k = round(math.log(tile_n, r))
+        return r ** k == tile_n or (r ** k) * 2 == tile_n or tile_n % r == 0
+
+    return check
+
+
+def in_register_rule():
+    """`in_register` (shuffle analogue) only when one problem row fits a VREG
+    tile region: n <= 8 lanes*sublanes worth of data we keep resident."""
+
+    def check(cfg: Config, wl: Workload) -> bool:
+        if not cfg.get("in_register", 0):
+            return True
+        return wl.n <= V5E.lane_count * V5E.sublane_count
+
+    return check
+
+
+# ---------------------------------------------------------------------------
+# Per-operation space declarations (paper Table I, adapted per DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def scan_space(wl: Workload) -> SearchSpace:
+    eb = dtype_bytes(wl.dtype)
+    max_rows = min(512, max(wl.batch, 1))
+    params = [
+        ParamSpec("tile_n", tuple(v for v in pow2_range(128, max(wl.n, 128)) if v <= wl.n) or (wl.n,)),
+        ParamSpec("rows_per_program", pow2_range(1, max_rows)),
+        ParamSpec("radix", (2, 4, 8)),          # tree fan-in per level
+        ParamSpec("unroll", (1, 2, 4, 8)),      # node-ops per VPU step
+        ParamSpec("in_register", (0, 1)),
+    ]
+    return SearchSpace(
+        wl,
+        params,
+        constraints=(
+            vmem_fits(eb),
+            tile_divides_n(),
+            rows_divide_batch(),
+            radix_compatible(),
+            in_register_rule(),
+        ),
+    )
+
+
+def tridiag_space(wl: Workload) -> SearchSpace:
+    # each element is an equation: 4 coefficients (a,b,c,d)
+    eb = 4 * dtype_bytes(wl.dtype)
+    max_rows = min(256, max(wl.batch, 1))
+    radix_dom = (2, 4, 8) if wl.variant == "wm" else (2,)  # paper: only WM retunes r
+    params = [
+        ParamSpec("tile_n", (wl.n,)),           # whole system stays resident
+        ParamSpec("rows_per_program", pow2_range(1, max_rows)),
+        ParamSpec("radix", radix_dom),
+        ParamSpec("unroll", (1, 2, 4)),
+        ParamSpec("in_register", (0, 1)),
+    ]
+    return SearchSpace(
+        wl,
+        params,
+        constraints=(
+            vmem_fits(eb),
+            rows_divide_batch(),
+            radix_compatible(),
+            in_register_rule(),
+        ),
+    )
+
+
+def fft_space(wl: Workload) -> SearchSpace:
+    eb = 2 * dtype_bytes(wl.dtype)  # complex: interleaved re/im
+    max_rows = min(256, max(wl.batch, 1))
+    params = [
+        ParamSpec("tile_n", (wl.n,)),
+        ParamSpec("rows_per_program", pow2_range(1, max_rows)),
+        ParamSpec("radix", (2, 4, 8, 16)),      # Stockham radix (paper: {2,4,8,16})
+        ParamSpec("unroll", (1, 2, 4)),
+        ParamSpec("in_register", (0,)),          # paper: no shuffle for FFT
+    ]
+    return SearchSpace(
+        wl,
+        params,
+        constraints=(vmem_fits(eb), rows_divide_batch(), radix_compatible()),
+    )
+
+
+def large_fft_space(wl: Workload, max_tile: int = 4096) -> SearchSpace:
+    """Multi-pass FFT (paper §IV-C): N exceeds the on-chip tile -> m passes.
+
+    The space covers (tile_n per pass, radix per pass, rows). tile_n here is
+    the per-pass working-set S; m = ceil(log(N)/log(S)).
+    """
+    eb = 2 * dtype_bytes(wl.dtype)
+    max_rows = min(64, max(wl.batch, 1))
+    tiles = tuple(v for v in pow2_range(256, max_tile))
+    params = [
+        ParamSpec("tile_n", tiles),
+        ParamSpec("rows_per_program", pow2_range(1, max_rows)),
+        ParamSpec("radix", (2, 4, 8, 16)),
+        ParamSpec("unroll", (1, 2, 4)),
+        ParamSpec("in_register", (0,)),
+    ]
+
+    def tile_le_n(cfg: Config, w: Workload) -> bool:
+        return cfg["tile_n"] <= w.n
+
+    return SearchSpace(
+        wl,
+        params,
+        constraints=(vmem_fits(eb), rows_divide_batch(), radix_compatible(), tile_le_n),
+    )
+
+
+def attention_space(wl: Workload) -> SearchSpace:
+    """Flash-attention block sizes (beyond-paper application of the method).
+
+    wl.n = kv sequence length; wl.batch = #(batch*heads) rows.
+    """
+    params = [
+        ParamSpec("block_q", (128, 256, 512, 1024)),
+        ParamSpec("block_k", (128, 256, 512, 1024, 2048)),
+        ParamSpec("rows_per_program", (1,)),
+        ParamSpec("radix", (2,)),
+        ParamSpec("unroll", (1, 2)),
+        ParamSpec("in_register", (0,)),
+    ]
+
+    def blocks_fit(cfg: Config, w: Workload) -> bool:
+        head_dim = 128
+        eb = 2  # bf16
+        # q-block + k-block + v-block + scores
+        foot = (cfg["block_q"] + 2 * cfg["block_k"]) * head_dim * eb
+        foot += cfg["block_q"] * cfg["block_k"] * 4
+        return foot * 2 <= V5E.vmem_budget and cfg["block_k"] <= w.n and cfg["block_q"] <= w.n
+
+    return SearchSpace(wl, params, constraints=(blocks_fit,))
+
+
+def matmul_space(wl: Workload) -> SearchSpace:
+    """Tiled matmul (M=batch, K=N=wl.n simplification for tuning demos)."""
+    params = [
+        ParamSpec("block_m", (128, 256, 512)),
+        ParamSpec("block_n", (128, 256, 512, 1024)),
+        ParamSpec("block_k", (128, 256, 512, 1024, 2048)),
+    ]
+
+    def fits(cfg: Config, w: Workload) -> bool:
+        eb = 2
+        foot = (cfg["block_m"] * cfg["block_k"] + cfg["block_k"] * cfg["block_n"]) * eb
+        foot += cfg["block_m"] * cfg["block_n"] * 4
+        return foot * 2 <= V5E.vmem_budget
+
+    return SearchSpace(wl, params, constraints=(fits,))
+
+
+_SPACE_BUILDERS: Dict[str, Callable[[Workload], SearchSpace]] = {
+    "scan": scan_space,
+    "tridiag": tridiag_space,
+    "fft": fft_space,
+    "large_fft": large_fft_space,
+    "ssd": scan_space,        # the SSD inter-chunk scan shares the scan space
+    "rglru": scan_space,
+    "attention": attention_space,
+    "matmul": matmul_space,
+}
+
+
+def build_space(wl: Workload) -> SearchSpace:
+    try:
+        builder = _SPACE_BUILDERS[wl.op]
+    except KeyError:
+        raise KeyError(f"no search space registered for op={wl.op!r}") from None
+    return builder(wl)
+
+
+def register_space(op: str, builder: Callable[[Workload], SearchSpace]) -> None:
+    _SPACE_BUILDERS[op] = builder

@@ -1,0 +1,237 @@
+"""Sharding-rules engine: parameter paths -> PartitionSpecs.
+
+2D "FSDP x TP" layout over ("data", "model"):
+  * the tensor-parallel dimension of each weight shards on "model"
+    (Megatron column/row split; experts shard on "model" = EP);
+  * the complementary dimension shards on "data" (ZeRO-3-style), so
+    optimizer state for the 34B/90B archs fits per-device HBM;
+  * the "pod" axis is pure DP: parameters are replicated across pods and
+    gradients all-reduce over DCI (optionally compressed, optim/compression).
+
+Rules check divisibility against the actual mesh; a non-divisible dim falls
+back to unsharded, and the decision log records every fallback (e.g.
+gemma-2b's 8-head QKV on a 16-way model axis shards the fused head*dim
+feature dimension instead — see DESIGN.md §5/§6).
+
+Leaves under "blocks"/"enc_blocks" carry a leading lax.scan group dimension;
+their specs get a leading None prepended automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# rule table: (path regex, spec template applied to the LAST len(template)
+# dims of the leaf). "fsdp" -> "data", "tp" -> "model", None -> replicated.
+_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"embed/table$",               ("tp", "fsdp")),
+    (r"attn/w[qkv]/w$",             ("fsdp", "tp")),
+    (r"xattn/w[qkv]/w$",            ("fsdp", "tp")),
+    (r"attn/wo/w$",                 ("tp", "fsdp")),
+    (r"xattn/wo/w$",                ("tp", "fsdp")),
+    (r"w[qkv]/b$",                  ("tp",)),
+    (r"mlp/w[iu]/w$",               ("fsdp", "tp")),
+    (r"mlp/wo/w$",                  ("tp", "fsdp")),
+    (r"shared/w[iu]/w$",            ("fsdp", "tp")),
+    (r"shared/wo/w$",               ("tp", "fsdp")),
+    (r"moe/router/w$",              ("fsdp", None)),
+    (r"moe/w[iu]$",                 ("tp", "fsdp", None)),   # (E, D, F): EP
+    (r"moe/wo$",                    ("tp", None, "fsdp")),   # (E, F, D)
+    (r"ssd/in_proj/w$",             ("fsdp", "tp")),
+    (r"ssd/out_proj/w$",            ("tp", "fsdp")),
+    (r"ssd/conv_w$",                (None, "tp")),
+    (r"rec/w[xy]/w$",               ("fsdp", "tp")),
+    (r"rec/w[ai]/w$",               (None, "tp")),
+    (r"rec/conv_w$",                (None, "tp")),
+    (r"rec/wo/w$",                  ("tp", "fsdp")),
+]
+
+_AXIS_MAP = {"fsdp": "data", "tp": "model"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+class ShardingDecisions:
+    """Collects rule hits/fallbacks for DESIGN/EXPERIMENTS reporting."""
+
+    def __init__(self):
+        self.fallbacks: List[str] = []
+        self.hits: Dict[str, str] = {}
+
+    def record(self, path: str, spec, note: str = ""):
+        self.hits[path] = f"{spec}{(' # ' + note) if note else ''}"
+
+    def record_fallback(self, path: str, dim: int, axis: str, size: int,
+                        dim_size: int):
+        self.fallbacks.append(
+            f"{path}: dim{dim} ({dim_size}) not divisible by {axis}"
+            f" ({size}) -> replicated on that axis")
+
+
+def spec_for_leaf(path: str, shape: Tuple[int, ...], mesh,
+                  scanned: bool, decisions: Optional[ShardingDecisions] = None
+                  ) -> P:
+    for pattern, template in _RULES:
+        if re.search(pattern, path):
+            ndim = len(shape)
+            offset = ndim - len(template)
+            axes: List[Optional[str]] = [None] * ndim
+            for i, logical in enumerate(template):
+                if logical is None:
+                    continue
+                axis = _AXIS_MAP[logical]
+                if axis not in mesh.axis_names:
+                    continue
+                size = mesh.shape[axis]
+                dim = offset + i
+                if shape[dim] % size == 0 and shape[dim] >= size:
+                    axes[dim] = axis
+                elif decisions is not None:
+                    decisions.record_fallback(path, dim, axis, size, shape[dim])
+            spec = P(*axes)
+            if decisions is not None:
+                decisions.record(path, spec)
+            return spec
+    # default: replicated (norm scales, small vectors, scalars)
+    return P()
+
+
+def param_specs(params: PyTree, mesh,
+                decisions: Optional[ShardingDecisions] = None,
+                pure_dp: bool = False) -> PyTree:
+    """PartitionSpec pytree matching `params` (leading scan dims handled).
+    pure_dp: replicate everything (small models where TP costs more in
+    residual all-reduces than it saves in memory)."""
+    if pure_dp:
+        return jax.tree.map(lambda l: P(*([None] * getattr(l, "ndim", 0))),
+                            params)
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        scanned = ps.startswith(("blocks", "enc_blocks"))
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        if scanned and len(shape) >= 1:
+            inner = spec_for_leaf(ps, tuple(shape[1:]), mesh, True, decisions)
+            return P(*((None,) + tuple(inner)))
+        return spec_for_leaf(ps, tuple(shape), mesh, False, decisions)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def shardings_from_specs(specs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, extra_dims: int = 1) -> P:
+    """Input batch sharding: (B, ...) with B over ("pod","data")."""
+    from repro.launch.mesh import batch_axes
+
+    axes = batch_axes(mesh)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None),
+             *([None] * extra_dims))
+
+
+def train_state_specs(state: PyTree, mesh,
+                      decisions: Optional[ShardingDecisions] = None,
+                      pure_dp: bool = False) -> PyTree:
+    """Specs for the full train state: optimizer moments inherit parameter
+    specs (AdamW) or sliced specs (Adafactor's factored accumulators)."""
+    from repro.optim.adamw import AdamWState
+    from repro.optim.adafactor import AdafactorState
+
+    pspecs = param_specs(state["params"], mesh, decisions,
+                         pure_dp=pure_dp)
+    out: Dict[str, Any] = {"params": pspecs, "step": P()}
+    opt = state["opt"]
+    if isinstance(opt, AdamWState):
+        out["opt"] = AdamWState(mu=pspecs, nu=pspecs, count=P())
+    elif isinstance(opt, AdafactorState):
+        def vr_spec(spec, p):
+            return P(*tuple(spec)[:-1]) if p.ndim >= 2 else spec
+
+        def vc_spec(spec, p):
+            t = tuple(spec)
+            return P(*(t[:-2] + t[-1:])) if p.ndim >= 2 else P()
+
+        out["opt"] = AdafactorState(
+            vr=jax.tree.map(vr_spec, pspecs, state["params"],
+                            is_leaf=lambda x: isinstance(x, P)),
+            vc=jax.tree.map(vc_spec, pspecs, state["params"],
+                            is_leaf=lambda x: isinstance(x, P)),
+            count=P())
+    else:
+        raise TypeError(f"unknown optimizer state {type(opt)}")
+    if "ef_err" in state:
+        out["ef_err"] = pspecs
+    return out
+
+
+def batch_specs(batch: PyTree, mesh, axes: Optional[Tuple[str, ...]] = None
+                ) -> PyTree:
+    """Input batches shard on the batch dim only; a batch smaller than the
+    batch-axis product (long_500k: global_batch=1) stays replicated.
+    `axes` overrides the batch axes (pure_dp: the whole mesh)."""
+    from repro.launch.mesh import batch_axes
+
+    baxes = axes if axes is not None else batch_axes(mesh)
+    total = 1
+    for a in baxes:
+        total *= mesh.shape[a]
+    b_axis = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % total == 0:
+            return P(b_axis, *([None] * max(leaf.ndim - 1, 0)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache: PyTree, mesh) -> PyTree:
+    """KV/state caches shard on batch; KV heads/features on model where
+    divisible (decode_32k: 128-batch x 32k cache dominates memory)."""
+    from repro.launch.mesh import batch_axes
+
+    baxes = batch_axes(mesh)
+    b_axis = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    model = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape[model] if model else 1
+
+    total = 1
+    for a in baxes:
+        total *= mesh.shape[a]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        # leading dim = scan groups, second = batch
+        axes: List[Optional[str]] = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % total == 0:
+            axes[1] = b_axis
+        # shard the widest trailing dim on model if divisible
+        if model and len(shape) >= 3:
+            best, best_dim = 0, -1
+            for d in range(2, len(shape)):
+                if shape[d] % msize == 0 and shape[d] > best:
+                    best, best_dim = shape[d], d
+            if best_dim >= 0 and best >= msize:
+                axes[best_dim] = model
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

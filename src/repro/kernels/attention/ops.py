@@ -1,0 +1,46 @@
+"""Tuned attention entry point with GQA + decode handling."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Workload, get_config
+from repro.kernels.attention.kernel import flash_attention_pallas
+from repro.kernels.attention.ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              config: Optional[dict] = None,
+              interpret: Optional[bool] = None,
+              use_pallas: Optional[bool] = None) -> jax.Array:
+    """Multi-head attention core on flattened (B*H, L, D) tensors.
+
+    GQA callers repeat KV heads before the call. Decode (Lq == 1) always
+    takes the XLA path — it is a GEMV-shaped, memory-bound op where flash
+    tiling has nothing to add.
+    """
+    BH, lq, d = q.shape
+    lk = k.shape[1]
+    if use_pallas is None:
+        use_pallas = ((not _on_cpu()) or bool(interpret)) and lq > 1
+    if not use_pallas or lq == 1:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    interpret = _on_cpu() if interpret is None else interpret
+    cfg = config or get_config(Workload(op="attention", n=lk, batch=BH,
+                                        variant="flash"))
+    bq = min(cfg.get("block_q", 256), lq)
+    while lq % bq:
+        bq //= 2
+    bk = min(cfg.get("block_k", 256), lk)
+    while lk % bk:
+        bk //= 2
+    return flash_attention_pallas(q, k, v, block_q=max(bq, 1),
+                                  block_k=max(bk, 1), causal=causal,
+                                  window=window, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Oracle: standard softmax attention (causal / local-window / full)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (BH, Lq, D), k/v: (BH, Lk, D) -> (BH, Lq, D).
+
+    When Lq < Lk the queries are assumed to be the *last* Lq positions
+    (decode with a KV cache)."""
+    BH, Lq, D = q.shape
+    Lk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(Lq) + (Lk - Lq)
+    kpos = jnp.arange(Lk)
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v)

@@ -1,0 +1,55 @@
+"""Oracles for the complex FFT kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fft_ref(x: jax.Array) -> jax.Array:
+    """Row-wise complex DFT via jnp.fft (x: (..., n) complex)."""
+    return jnp.fft.fft(x, axis=-1)
+
+
+def stockham_jnp(x: jax.Array, radix: int = 2) -> jax.Array:
+    """Self-sorting Stockham DIF in pure jnp complex arithmetic.
+
+    Validates the staged formulation the Pallas kernel mirrors on split
+    re/im planes.
+    """
+    rows, n = x.shape
+    buf = x
+    n_cur, s = n, 1
+    while n_cur > 1:
+        rr = min(radix, n_cur)
+        m = n_cur // rr
+        v = buf.reshape(rows, n_cur, s)
+        parts = [v[:, k * m:(k + 1) * m, :] for k in range(rr)]
+        p = jnp.arange(m).reshape(1, m, 1)
+        outs = []
+        for j in range(rr):
+            t = sum(parts[k] * jnp.exp(-2j * jnp.pi * j * k / rr)
+                    for k in range(rr))
+            t = t * jnp.exp(-2j * jnp.pi * j * p / n_cur)
+            outs.append(t)
+        buf = jnp.stack(outs, axis=2).reshape(rows, n)
+        n_cur, s = m, s * rr
+    return buf
+
+
+def four_step_ref(x: jax.Array, n1: int) -> jax.Array:
+    """Four-step (Bailey) large FFT oracle: N = n1 * n2.
+
+    1. view as (n2, n1) in row-major (index = i2*n1 + i1... we use the
+       transpose convention below), FFT columns, twiddle, FFT rows,
+       transpose.
+    """
+    rows, n = x.shape
+    n2 = n // n1
+    v = x.reshape(rows, n2, n1)
+    v = jnp.fft.fft(v, axis=1)                       # length-n2 FFTs
+    k2 = jnp.arange(n2).reshape(1, n2, 1)
+    k1 = jnp.arange(n1).reshape(1, 1, n1)
+    v = v * jnp.exp(-2j * jnp.pi * k1 * k2 / n)      # twiddle
+    v = jnp.fft.fft(v, axis=2)                       # length-n1 FFTs
+    v = jnp.transpose(v, (0, 2, 1))                  # self-sort
+    return v.reshape(rows, n)

@@ -1,0 +1,37 @@
+"""Tuned matmul entry point (TuningDB-driven block shapes)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core import Workload, get_config
+from repro.kernels.matmul.kernel import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def matmul(a: jax.Array, b: jax.Array, config: Optional[dict] = None,
+           interpret: Optional[bool] = None,
+           use_pallas: Optional[bool] = None) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    if use_pallas is None:
+        use_pallas = (not _on_cpu()) or bool(interpret)
+    if not use_pallas:
+        return matmul_ref(a, b)
+    interpret = _on_cpu() if interpret is None else interpret
+    cfg = config or get_config(Workload(op="matmul", n=n, batch=m,
+                                        variant="tiled"))
+    def fit(block, dim):
+        block = min(block, dim)
+        while dim % block:
+            block //= 2
+        return max(block, 1)
+    return matmul_pallas(a, b, block_m=fit(cfg.get("block_m", 256), m),
+                         block_n=fit(cfg.get("block_n", 256), n),
+                         block_k=fit(cfg.get("block_k", 256), k),
+                         interpret=interpret)

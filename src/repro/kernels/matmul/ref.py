@@ -1,0 +1,6 @@
+"""Oracle for the tiled matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)

@@ -1,0 +1,27 @@
+"""RG-LRU via the tuned linear-recurrence scan kernel.
+
+The gate computation lives in the model layer; this op runs the recurrence
+h_t = a_t h_{t-1} + sqrt(1-a_t^2) u_t by flattening (B, L, D) into
+(B*D, L) rows for the scan kernel — the direct integration of the paper's
+tuned scan into RecurrentGemma.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scan.ops import linear_recurrence
+
+
+def rglru(a: jax.Array, u: jax.Array, config: Optional[dict] = None,
+          interpret: Optional[bool] = None,
+          use_pallas: Optional[bool] = None) -> jax.Array:
+    B, L, D = a.shape
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * u
+    a_rows = jnp.transpose(a, (0, 2, 1)).reshape(B * D, L)
+    b_rows = jnp.transpose(b, (0, 2, 1)).reshape(B * D, L)
+    h = linear_recurrence(a_rows, b_rows, config=config, interpret=interpret,
+                          use_pallas=use_pallas)
+    return jnp.transpose(h.reshape(B, D, L), (0, 2, 1))

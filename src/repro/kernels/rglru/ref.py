@@ -1,0 +1,20 @@
+"""Oracle for the RG-LRU (Real-Gated Linear Recurrent Unit) core.
+
+Given per-position per-channel decay a (0,1) and gated input u:
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * u_t
+(De et al., RecurrentGemma / Griffin). Shapes: (B, L, D).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jax.Array, u: jax.Array) -> jax.Array:
+    def step(h, au):
+        a_t, u_t = au
+        h = a_t * h + jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 0.0)) * u_t
+        return h, h
+
+    aT = jnp.moveaxis(a, 1, 0)
+    uT = jnp.moveaxis(u, 1, 0)
+    _, hT = jax.lax.scan(step, jnp.zeros_like(aT[0]), (aT, uT))
+    return jnp.moveaxis(hT, 0, 1)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the scan kernel family.
+
+The scan primitive operates row-wise on (batch, n) arrays. Two monoids:
+  - "add": ordinary prefix sum (the paper's scan primitive);
+  - "linrec": first-order linear recurrence h_t = a_t * h_{t-1} + b_t over
+    element pairs (a, b) — the building block for RG-LRU and SSD inter-chunk
+    state propagation. Monoid: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_add_ref(x: jax.Array) -> jax.Array:
+    """Inclusive prefix sum along the last axis."""
+    return jnp.cumsum(x, axis=-1)
+
+
+def scan_add_exclusive_ref(x: jax.Array) -> jax.Array:
+    inc = jnp.cumsum(x, axis=-1)
+    return jnp.concatenate([jnp.zeros_like(inc[..., :1]), inc[..., :-1]], axis=-1)
+
+
+def scan_linrec_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t, h_0 = b_0 (i.e. h_{-1} = 0), along last axis.
+
+    Sequential lax.scan ground truth (exact order of operations).
+    """
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    aT = jnp.moveaxis(a, -1, 0)
+    bT = jnp.moveaxis(b, -1, 0)
+    _, hT = jax.lax.scan(step, jnp.zeros_like(aT[0]), (aT, bT))
+    return jnp.moveaxis(hT, 0, -1)
+
+
+def scan_linrec_assoc_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Same recurrence via jax.lax.associative_scan (parallel ground truth)."""
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_out, b_out = jax.lax.associative_scan(combine, (a, b), axis=-1)
+    return b_out
+
+
+def scan_max_ref(x: jax.Array) -> jax.Array:
+    return jax.lax.associative_scan(jnp.maximum, x, axis=-1)

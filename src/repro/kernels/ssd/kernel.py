@@ -1,0 +1,122 @@
+"""Pallas TPU kernels for the Mamba-2 SSD chunked algorithm.
+
+Three-phase parallel form (Dao & Gu 2024, adapted to TPU tiling):
+  phase A (kernel): per (batch*head, chunk) block, compute the intra-chunk
+    output via the quadratic dual form — Q x Q attention-like matmuls that
+    map straight onto the MXU — plus the chunk's state-space transition
+    (a_chunk scalar, (S, P) state injection);
+  phase B (tuned scan): linear-recurrence scan over chunk transitions
+    (reuses the paper-tuned scan kernel / monoid);
+  phase C (kernel): broadcast scanned entry states back into each chunk.
+
+Tunables: chunk length Q (the VMEM tile; tile_n in the tuning space),
+rows via the grid. Q is hardware-aligned to the 128-lane MXU edge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _intra_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, ac_ref, st_ref):
+    x = x_ref[0].astype(jnp.float32)      # (Q, P)
+    a = a_ref[0].astype(jnp.float32)      # (Q,)
+    b = b_ref[0].astype(jnp.float32)      # (Q, S)
+    c = c_ref[0].astype(jnp.float32)      # (Q, S)
+    q = x.shape[0]
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(a, 1e-30)))            # (Q,)
+    diff = la[:, None] - la[None, :]                           # (Q, Q) t,s
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    ratio = jnp.exp(jnp.where(mask, diff, -1e30))  # mask inside exp (no inf)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    scores = cb * ratio
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    decay_end = jnp.exp(la[-1] - la)                           # (Q,)
+    bw = b * decay_end[:, None]                                # (Q, S)
+    state = jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (S, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+    ac_ref[0, 0] = jnp.exp(la[-1]).astype(ac_ref.dtype)
+    st_ref[0, 0] = state.astype(st_ref.dtype)
+
+
+def _inter_kernel(y_ref, a_ref, c_ref, ent_ref, o_ref):
+    y = y_ref[0].astype(jnp.float32)      # (Q, P)
+    a = a_ref[0].astype(jnp.float32)      # (Q,)
+    c = c_ref[0].astype(jnp.float32)      # (Q, S)
+    ent = ent_ref[0, 0].astype(jnp.float32)  # (S, P)
+    la = jnp.cumsum(jnp.log(jnp.maximum(a, 1e-30)))
+    amul = jnp.exp(la)                    # (Q,)
+    y_in = jax.lax.dot_general(c, ent, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (Q, P)
+    o_ref[0] = (y + y_in * amul[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_pallas(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
+    """x: (BH, L, P); a: (BH, L); b, c: (BH, L, S) — b/c pre-broadcast.
+
+    Returns (y_intra (BH, L, P), a_chunk (BH, nc), state (BH, nc, S, P)).
+    """
+    BH, L, P = x.shape
+    S = b.shape[-1]
+    nc = L // chunk
+    grid = (BH, nc)
+    kernel = _intra_kernel
+    y, ac, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, S), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, S), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1, S, P), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, nc), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, S, P), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, a, b, c)
+    return y, ac, st
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_apply_entry_pallas(y_intra, a, c, entry, *, chunk: int = 128,
+                           interpret: bool = False):
+    """Adds the inter-chunk contribution. entry: (BH, nc, S, P)."""
+    BH, L, P = y_intra.shape
+    S = c.shape[-1]
+    nc = L // chunk
+    return pl.pallas_call(
+        _inter_kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, S), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, S, P), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, P), y_intra.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(y_intra, a, c, entry)

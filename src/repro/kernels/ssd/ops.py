@@ -1,0 +1,68 @@
+"""Tuned SSD op: three-phase chunked state-space dual.
+
+`ssd(x, a, b, c)` with shapes (B, L, H, P), (B, L, H), (B, L, S), (B, L, S).
+The chunk length comes from the TuningDB (op="ssd" shares the scan space;
+tile_n -> chunk). On CPU hosts the pure-jnp chunked formulation runs (same
+math, XLA-fused); the Pallas path is exercised in interpret mode by tests
+and compiled on real TPUs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Workload, get_config
+from repro.kernels.scan.ref import scan_linrec_assoc_ref
+from repro.kernels.ssd.kernel import ssd_apply_entry_pallas, ssd_intra_pallas
+from repro.kernels.ssd.ref import ssd_chunked_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pick_chunk(L: int, cfg: dict) -> int:
+    chunk = min(cfg.get("tile_n", 128), L)
+    while L % chunk:
+        chunk //= 2
+    return max(chunk, 1)
+
+
+def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+        config: Optional[dict] = None, interpret: Optional[bool] = None,
+        use_pallas: Optional[bool] = None) -> jax.Array:
+    B, L, H, P = x.shape
+    S = b.shape[-1]
+    cfg = config or get_config(Workload(op="ssd", n=L, batch=B * H,
+                                        variant="chunked"))
+    chunk = _pick_chunk(L, cfg)
+    if use_pallas is None:
+        use_pallas = (not _on_cpu()) or bool(interpret)
+    if not use_pallas:
+        return ssd_chunked_ref(x, a, b, c, chunk=chunk)
+    interpret = _on_cpu() if interpret is None else interpret
+
+    # reshape to (BH, L, ...) rows; broadcast b/c over heads (n_groups=1)
+    xbh = jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, L, P)
+    abh = jnp.transpose(a, (0, 2, 1)).reshape(B * H, L)
+    bbh = jnp.broadcast_to(b[:, None], (B, H, L, S)).reshape(B * H, L, S)
+    cbh = jnp.broadcast_to(c[:, None], (B, H, L, S)).reshape(B * H, L, S)
+
+    y_intra, a_chunk, state = ssd_intra_pallas(
+        xbh, abh, bbh, cbh, chunk=chunk, interpret=interpret)
+    nc = L // chunk
+
+    # phase B: inter-chunk linear recurrence (rows = BH*S*P, length nc)
+    a_rows = jnp.broadcast_to(a_chunk[:, None, None, :], (B * H, S, P, nc))
+    s_rows = jnp.transpose(state, (0, 2, 3, 1))          # (BH, S, P, nc)
+    h = scan_linrec_assoc_ref(a_rows.reshape(-1, nc), s_rows.reshape(-1, nc))
+    h = h.reshape(B * H, S, P, nc)
+    entry = jnp.concatenate(
+        [jnp.zeros_like(h[..., :1]), h[..., :-1]], axis=-1)
+    entry = jnp.transpose(entry, (0, 3, 1, 2))           # (BH, nc, S, P)
+
+    y = ssd_apply_entry_pallas(y_intra, abh, cbh, entry, chunk=chunk,
+                               interpret=interpret)
+    return jnp.transpose(y.reshape(B, H, L, P), (0, 2, 1, 3))

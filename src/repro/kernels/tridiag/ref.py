@@ -1,0 +1,64 @@
+"""Oracles for batched tridiagonal solvers.
+
+System i of a batch: a[i,0]=0 and c[i,n-1]=0 (standard convention);
+    a[i,j]*x[i,j-1] + b[i,j]*x[i,j] + c[i,j]*x[i,j+1] = d[i,j]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def thomas_ref(a: jax.Array, b: jax.Array, c: jax.Array, d: jax.Array) -> jax.Array:
+    """Sequential Thomas algorithm via lax.scan — the exact ground truth."""
+
+    def fwd(carry, abcd):
+        cp_prev, dp_prev = carry
+        ai, bi, ci, di = abcd
+        denom = bi - ai * cp_prev
+        cp = ci / denom
+        dp = (di - ai * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    aT, bT, cT, dT = (jnp.moveaxis(v, -1, 0) for v in (a, b, c, d))
+    zeros = jnp.zeros_like(aT[0])
+    _, (cp, dp) = jax.lax.scan(fwd, (zeros, zeros), (aT, bT, cT, dT))
+
+    def bwd(x_next, cpdp):
+        cpi, dpi = cpdp
+        x = dpi - cpi * x_next
+        return x, x
+
+    _, xT = jax.lax.scan(bwd, zeros, (cp, dp), reverse=True)
+    return jnp.moveaxis(xT, 0, -1)
+
+
+def dense_solve_ref(a: jax.Array, b: jax.Array, c: jax.Array, d: jax.Array) -> jax.Array:
+    """Builds the dense matrix per system and solves — small-n oracle."""
+    n = a.shape[-1]
+    mat = (jnp.zeros(a.shape[:-1] + (n, n), a.dtype)
+           .at[..., jnp.arange(n), jnp.arange(n)].set(b))
+    mat = mat.at[..., jnp.arange(1, n), jnp.arange(n - 1)].set(a[..., 1:])
+    mat = mat.at[..., jnp.arange(n - 1), jnp.arange(1, n)].set(c[..., :-1])
+    return jnp.linalg.solve(mat, d[..., None])[..., 0]
+
+
+def random_system(key, batch: int, n: int, dtype=jnp.float32):
+    """Diagonally-dominant random system (well-conditioned for all solvers)."""
+    ka, kb, kc, kd = jax.random.split(key, 4)
+    a = jax.random.uniform(ka, (batch, n), dtype, 0.1, 1.0)
+    c = jax.random.uniform(kc, (batch, n), dtype, 0.1, 1.0)
+    a = a.at[:, 0].set(0.0)
+    c = c.at[:, -1].set(0.0)
+    b = (jnp.abs(a) + jnp.abs(c)
+         + jax.random.uniform(kb, (batch, n), dtype, 1.0, 2.0))
+    d = jax.random.normal(kd, (batch, n), dtype)
+    return a, b, c, d
+
+
+def residual(a, b, c, d, x):
+    """max |A x - d| — solver-independent correctness check."""
+    ax = (a * jnp.pad(x, ((0, 0), (1, 0)))[:, :-1]
+          + b * x
+          + c * jnp.pad(x, ((0, 0), (0, 1)))[:, 1:])
+    return jnp.max(jnp.abs(ax - d))

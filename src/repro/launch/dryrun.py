@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 host placeholders.
+
+For each cell we jax.jit the step with explicit in/out shardings, .lower()
+it on ShapeDtypeStruct inputs, .compile(), and record memory_analysis() +
+cost_analysis() + the collective bytes parsed from the optimized HLO —
+the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, SHAPES, ShapeConfig, all_archs,
+                                get_arch, shape_applicable)
+from repro.distributed.sharding import (ShardingDecisions, batch_specs,
+                                        cache_specs, param_specs,
+                                        train_state_specs)
+from repro.launch.inputs import (abstract_train_state, decode_input_specs,
+                                 prefill_input_specs, train_input_specs)
+from repro.launch.mesh import batch_axes as mesh_batch_axes, make_production_mesh
+from repro.models.model import build_model
+from repro.train.step import (TrainHParams, make_decode_step,
+                              make_prefill_step, make_train_step)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# per-arch training hyperparameter overrides: gradient accumulation keeps
+# the biggest models' activation working set inside v5e HBM (a standard
+# production lever; recorded per cell in EXPERIMENTS.md)
+_HP_OVERRIDES = {
+    "llama-3.2-vision-90b": TrainHParams(micro_steps=4),
+    "granite-34b": TrainHParams(micro_steps=2),
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               hp: Optional[TrainHParams] = None,
+               arch_cfg: Optional[ModelConfig] = None,
+               return_artifacts: bool = False) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the §Dry-run record."""
+    cfg = arch_cfg or get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "mesh": "2x16x16" if multi_pod else "16x16", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = mesh_batch_axes(mesh)
+    if cfg.pure_dp:
+        baxes = baxes + ("model",)
+    bshards = 1
+    for a in baxes:
+        bshards *= mesh.shape[a]
+    cfg = dataclasses.replace(
+        cfg, model_axis_size=0 if cfg.pure_dp else mesh.shape["model"],
+        batch_axes=baxes, batch_shards=bshards)
+    model = build_model(cfg)
+    hp = hp or _HP_OVERRIDES.get(arch, TrainHParams())
+    decisions = ShardingDecisions()
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            state = abstract_train_state(model, hp)
+            sspecs = train_state_specs(state, mesh, decisions,
+                                       pure_dp=cfg.pure_dp)
+            batch = train_input_specs(cfg, shape)
+            bspecs = batch_specs(batch, mesh, axes=cfg.batch_axes)
+            step = make_train_step(model, hp)
+            jitted = jax.jit(step,
+                             in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),
+                             out_shardings=(_ns(mesh, sspecs), None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            params = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            pspecs = param_specs(params, mesh, decisions)
+            batch = prefill_input_specs(cfg, shape)
+            bspecs = batch_specs(batch, mesh)
+            step = make_prefill_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+                             out_shardings=None)
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            params = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            pspecs = param_specs(params, mesh, decisions)
+            inputs, cache = decode_input_specs(cfg, shape)
+            cspecs = cache_specs(cache, mesh)
+            ispecs = batch_specs(inputs, mesh)
+            step = make_decode_step(model)
+            in_sh = [_ns(mesh, pspecs), _ns(mesh, ispecs["token"]),
+                     _ns(mesh, cspecs), _ns(mesh, ispecs["pos"])]
+            args = (params, inputs["token"], cache, inputs["pos"])
+            if "memory" in inputs:
+                in_sh.append(_ns(mesh, ispecs["memory"]))
+                args = args + (inputs["memory"],)
+            jitted = jax.jit(
+                step,
+                in_shardings=tuple(in_sh),
+                out_shardings=(None, _ns(mesh, cspecs)),
+                donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        jaxpr_cost = None
+        if return_artifacts:
+            # trip-count-exact analytic flops/bytes (XLA:CPU cost_analysis
+            # counts while bodies once — see launch/jaxpr_cost.py)
+            from repro.launch.jaxpr_cost import analyze_jaxpr
+            if shape.kind == "train":
+                jaxpr_cost = analyze_jaxpr(step, state, batch)
+            elif shape.kind == "prefill":
+                jaxpr_cost = analyze_jaxpr(step, params, batch)
+            else:
+                jaxpr_cost = analyze_jaxpr(step, *args)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "sharding_fallbacks": decisions.fallbacks,
+    }
+    if return_artifacts:
+        record["_lowered"] = lowered
+        record["_compiled"] = compiled
+        record["jaxpr_cost"] = jaxpr_cost
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # a failure here is a bug in the system
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            results.append(rec)
+            status = rec["status"]
+            extra = (f" peak={rec['per_device']['peak_bytes']/2**30:.2f}GiB"
+                     f" flops={rec['flops']:.3e}"
+                     if status == "ok" else rec.get("reason",
+                                                    rec.get("error", "")))
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+            path = os.path.join(args.out,
+                                f"{arch}_{shape}_{rec['mesh']}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = len(results) - n_ok - n_skip
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

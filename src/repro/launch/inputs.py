@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation happens here: shapes/dtypes only, shardable through
+the specs produced alongside. Modality frontends are stubs — audio cells
+receive precomputed frame embeddings, vlm cells patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+
+PyTree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def memory_struct(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    if cfg.family == "audio":
+        return _sds((batch, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        return _sds((batch, cfg.vision_len, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "targets": _sds((b, s), jnp.int32),
+        "mask": _sds((b, s), jnp.float32),
+    }
+    mem = memory_struct(cfg, b)
+    if mem is not None:
+        batch["memory"] = mem
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    mem = memory_struct(cfg, b)
+    if mem is not None:
+        batch["memory"] = mem
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Tuple[Dict, PyTree]:
+    """Returns (inputs, cache_struct): one new token against a seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, max_len=s, dtype=jnp.bfloat16))
+    inputs = {"token": _sds((b, 1), jnp.int32),
+              "pos": _sds((b, 1), jnp.int32)}
+    mem = memory_struct(cfg, b)
+    if mem is not None:
+        inputs["memory"] = mem
+    return inputs, cache
+
+
+def abstract_train_state(model: Model, hp) -> PyTree:
+    from repro.train.step import init_train_state
+
+    return jax.eval_shape(
+        lambda: init_train_state(model, hp, jax.random.PRNGKey(0)))

@@ -1,0 +1,274 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs / (chips x 197e12)
+    memory term     = HLO_bytes / (chips x 819e9)
+    collective term = collective_bytes / (chips x 50e9)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). XLA:CPU reports
+them for the per-device partitioned module, so chips-normalization is
+already done; we multiply back to global where needed for MODEL_FLOPS
+ratios. Collective bytes are parsed from the optimized HLO text: the sum of
+shard-local operand bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute, scaled by the collective's algorithmic
+byte multiplier on a ring (all-gather/reduce-scatter: (n-1)/n x global
+bytes; all-reduce: 2(n-1)/n; all-to-all: (n-1)/n; permute: 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --arch X --shape Y [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.roofline --all     # full table
+"""
+import argparse
+import json
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs.base import SHAPES, all_archs, get_arch, shape_applicable
+from repro.hw.tpu import V5E
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+)\s*=\s*[^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b", re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([\d,]*)\]")
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Computation definitions start at column 0 (module scope) as
+    `[ENTRY ]%name (params...) -> result {`; params may nest parens, so the
+    name is simply the first %token."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        is_def = (not line.startswith(" ") and stripped.endswith("{")
+                  and "->" in stripped
+                  and (stripped.startswith("%")
+                       or stripped.startswith("ENTRY")))
+        if is_def:
+            tok = stripped.split()[1] if stripped.startswith("ENTRY") \
+                else stripped.split()[0]
+            name = tok.split("(")[0].lstrip("%").rstrip()
+            cur = name
+            comps[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _collective_wire_bytes(line: str, kind: str) -> float:
+    m = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s*" + kind, line)
+    out_bytes = _shape_bytes(m.group(1)) if m else 0
+    g = _REPLICA_GROUPS_RE.search(line)
+    group_size = len(g.group(1).split(",")) if g else 2
+    frac = (group_size - 1) / max(group_size, 1)
+    if kind == "all-reduce":
+        return 2 * frac * out_bytes
+    if kind == "collective-permute":
+        return float(out_bytes)
+    return frac * out_bytes
+
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device collective wire bytes from optimized (post-SPMD) HLO,
+    multiplying collectives inside `while` bodies by the loop trip count
+    (XLA prints the body once; a scan-over-88-layers would otherwise be
+    undercounted 88x). Trip counts are read from the largest integer
+    constant in the loop's condition computation (the scan bound)."""
+    comps = _split_computations(hlo_text)
+
+    def comp_trip(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(c.group(1)))
+        return best
+
+    per_kind: Dict[str, float] = {}
+    count = 0
+    visited_stack = set()
+
+    def walk(name: str, mult: float) -> None:
+        nonlocal count
+        if name in visited_stack:       # recursion guard
+            return
+        visited_stack.add(name)
+        for line in comps.get(name, []):
+            kind_hit = None
+            for kind in _KINDS:
+                if re.search(rf"\b{kind}(?:-start)?\(", line):
+                    kind_hit = kind
+                    break
+            if kind_hit and "=" in line:
+                per_kind[kind_hit] = per_kind.get(kind_hit, 0.0) + \
+                    mult * _collective_wire_bytes(line, kind_hit)
+                count += 1
+            # recurse into subcomputations
+            if " while(" in line or "= while(" in line:
+                body = re.search(r"body=%?([\w.\-]+)", line)
+                cond = re.search(r"condition=%?([\w.\-]+)", line)
+                trip = comp_trip(cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), mult * trip)
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                     line):
+                    walk(m.group(1), mult)
+        visited_stack.discard(name)
+
+    walk("__entry__", 1.0)
+    return {"per_device_wire_bytes": sum(per_kind.values()),
+            "per_kind": per_kind, "count": count}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train; the
+    2*N*D forward-only version for prefill; 2*N_active*D per decode token.
+    Enc-dec splits by token stream: decoder params x decoder tokens +
+    encoder params x frame count."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    # active params: embeddings excluded (matmul-active weights only)
+    from repro.launch.params import active_param_count, audio_split_params
+    mult = 6.0 if shape.kind == "train" else 2.0
+    dec_tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+    if cfg.family == "audio":
+        enc_p, dec_p = audio_split_params(cfg)
+        enc_tokens = (shape.global_batch * cfg.enc_len
+                      if shape.kind != "decode" else 0)
+        return mult * (dec_p * dec_tokens + enc_p * enc_tokens)
+    return mult * active_param_count(cfg) * dec_tokens
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, chips: int) -> Dict[str, float]:
+    spec = V5E
+    return {
+        "compute_s": flops_per_dev / spec.peak_bf16_flops,
+        "memory_s": bytes_per_dev / spec.hbm_bandwidth,
+        "collective_s": coll_bytes_per_dev / spec.ici_link_bandwidth,
+    }
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 arch_cfg=None, hp=None) -> Dict[str, Any]:
+    from repro.launch.dryrun import lower_cell
+
+    rec = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                     return_artifacts=True, arch_cfg=arch_cfg, hp=hp)
+    if rec["status"] != "ok":
+        return rec
+    compiled = rec.pop("_compiled")
+    rec.pop("_lowered")
+    chips = 512 if multi_pod else 256
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    # primary flop/byte source: trip-count-exact jaxpr analysis (global
+    # shapes -> per-chip under the realized sharding); cost_analysis() is
+    # kept as the cross-check (XLA:CPU counts while bodies once)
+    jc = rec.get("jaxpr_cost") or {}
+    flops_dev = jc.get("flops", 0.0) / chips
+    bytes_dev = jc.get("bytes", 0.0) / chips
+    terms = roofline_terms(flops_dev, bytes_dev,
+                           coll["per_device_wire_bytes"], chips)
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape_name)
+    rec.update({
+        "chips": chips,
+        "collectives": coll,
+        "roofline": terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_per_dev_costanalysis": rec["flops"],
+        "useful_flops_ratio": mf / jc["flops"] if jc.get("flops") else 0,
+        "step_time_bound_s": max(terms.values()),
+        "mfu_upper_bound": (mf / chips / V5E.peak_bf16_flops)
+        / max(max(terms.values()), 1e-12),
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/roofline")
+    args = ap.parse_args()
+
+    cells: List[Tuple[str, str]] = []
+    if args.all:
+        for arch in all_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        try:
+            rec = analyze_cell(arch, shape, multi_pod=args.multi_pod)
+        except Exception as e:
+            import traceback
+            rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-1500:]}
+        tag = f"{arch}|{shape}"
+        if rec["status"] == "ok":
+            t = rec["roofline"]
+            print(f"[roofline] {tag}: comp={t['compute_s']*1e3:.2f}ms "
+                  f"mem={t['memory_s']*1e3:.2f}ms "
+                  f"coll={t['collective_s']*1e3:.2f}ms "
+                  f"dom={rec['dominant']} "
+                  f"useful={rec['useful_flops_ratio']:.2f} "
+                  f"mfu_ub={rec['mfu_upper_bound']:.3f}", flush=True)
+        else:
+            print(f"[roofline] {tag}: {rec['status']} "
+                  f"{rec.get('reason', rec.get('error',''))}", flush=True)
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        with open(os.path.join(args.out, f"{arch}_{shape}_{mesh_tag}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

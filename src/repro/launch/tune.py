@@ -1,0 +1,54 @@
+"""Offline tuning CLI — populates the TuningDB (paper's offline flow).
+
+  PYTHONPATH=src python -m repro.launch.tune --op scan --variant lf \
+      --sizes 128,256,512 --method bayesian
+  PYTHONPATH=src python -m repro.launch.tune --paper-suite   # all paper ops
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.paper_ops import PREFIX_OPS, TOTAL_ELEMS
+from repro.core import TPUCostModelObjective, Workload, tune_offline
+
+
+def tune_suite(method: str, noise: float = 0.02, verbose: bool = True) -> None:
+    for op, spec in PREFIX_OPS.items():
+        for variant in spec["variants"]:
+            for n in spec["sizes"]:
+                wl = Workload(op=op, n=n, batch=max(TOTAL_ELEMS // n, 1),
+                              variant=variant)
+                res = tune_offline(wl, method=method,
+                                   objective=TPUCostModelObjective(noise=noise))
+                if verbose:
+                    print(f"[tune] {wl.key}: {res.best_config} "
+                          f"t={res.best_time*1e6:.1f}us "
+                          f"evals={res.evaluations}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--op", default=None)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--sizes", default="")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--method", default="bayesian",
+                    choices=["bayesian", "analytical", "exhaustive", "random"])
+    ap.add_argument("--paper-suite", action="store_true")
+    args = ap.parse_args()
+
+    if args.paper_suite:
+        tune_suite(args.method)
+        return
+    assert args.op and args.sizes
+    for n in [int(s) for s in args.sizes.split(",")]:
+        wl = Workload(op=args.op, n=n,
+                      batch=args.batch or max(TOTAL_ELEMS // n, 1),
+                      variant=args.variant)
+        res = tune_offline(wl, method=args.method)
+        print(f"[tune] {wl.key}: {res.best_config} "
+              f"t={res.best_time*1e6:.1f}us evals={res.evaluations}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""RecurrentGemma recurrent block: conv1d + RG-LRU (tuned linrec scan)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.scan.ops import linear_recurrence
+from repro.models.layers import causal_conv1d, dense, init_dense
+
+_C = 8.0  # RG-LRU decay sharpness (Griffin)
+
+
+def init_recurrent_block(key, cfg: ModelConfig, dtype) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": init_dense(ks[0], d, w, dtype),
+        "wy": init_dense(ks[1], d, w, dtype),          # gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "wa": init_dense(ks[3], w, w, dtype),          # recurrence gate
+        "wi": init_dense(ks[4], w, w, dtype),          # input gate
+        "lambda": (jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, w) ** (-1.0 / _C) - 1.0))
+        ).astype(jnp.float32),                         # softplus^-1 param
+        "wo": init_dense(ks[5], w, d, dtype),
+    }
+
+
+def recurrent_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                    cache: Optional[Dict] = None,
+                    compute_dtype=jnp.bfloat16
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, L, D). cache: {"conv": (B,K-1,W), "state": (B,W)}."""
+    bsz, L, _ = x.shape
+    u = dense(p["wx"], x, compute_dtype)
+    gate = jax.nn.gelu(dense(p["wy"], x, compute_dtype), approximate=True)
+    u, conv_cache = causal_conv1d(
+        u, p["conv_w"].astype(compute_dtype),
+        cache=None if cache is None else cache["conv"])
+
+    r = jax.nn.sigmoid(dense(p["wa"], u, jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wi"], u, jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"])[None, None, :] * r
+    a = jnp.exp(log_a)                                          # (B, L, W)
+    gated = i * u.astype(jnp.float32)
+    # 1 - a^2 = -expm1(2 log_a): exact and grad-stable as a -> 1
+    b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * gated
+
+    if cache is None or L > 1:
+        W = a.shape[-1]
+        a_rows = jnp.transpose(a, (0, 2, 1)).reshape(bsz * W, L)
+        b_rows = jnp.transpose(b, (0, 2, 1)).reshape(bsz * W, L)
+        h = linear_recurrence(a_rows, b_rows,
+                              use_pallas=cfg.use_pallas or None)
+        h = jnp.transpose(h.reshape(bsz, W, L), (0, 2, 1))
+        new_state = h[:, -1]
+    else:
+        h = a[:, 0] * cache["state"] + b[:, 0]                  # (B, W)
+        new_state = h
+        h = h[:, None]
+
+    y = dense(p["wo"], h.astype(compute_dtype) * gate, compute_dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_cache.astype(cache["conv"].dtype),
+                     "state": new_state}
+    return y, new_cache
+
+
+def init_recurrent_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+            "state": jnp.zeros((batch, w), jnp.float32)}

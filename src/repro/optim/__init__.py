@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw, AdamWState
+from repro.optim.adafactor import adafactor, AdafactorState
+from repro.optim.schedule import warmup_cosine, constant
+from repro.optim.clip import clip_by_global_norm, global_norm

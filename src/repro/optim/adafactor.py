@@ -1,0 +1,74 @@
+"""Adafactor (factored second moment) — memory-frugal option for 34B/90B.
+
+Row/column factored accumulators: O(n+m) state per (n, m) matrix instead of
+Adam's O(nm) fp32 pair. Vectors keep full second moment.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdafactorState(NamedTuple):
+    vr: PyTree      # row accumulators (or full v for <2D)
+    vc: PyTree      # col accumulators (zeros for <2D)
+    count: jax.Array
+
+
+def adafactor(lr: Callable | float, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params: PyTree) -> AdafactorState:
+        def vr_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(jax.tree.map(vr_init, params),
+                              jax.tree.map(vc_init, params),
+                              jnp.zeros((), jnp.int32))
+
+    def update(grads: PyTree, state: AdafactorState, params: PyTree
+               ) -> Tuple[PyTree, AdafactorState]:
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        step_lr = lr_fn(count)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.einsum("...r,...c->...rc", vr, vc)
+                denom = denom / jnp.clip(
+                    jnp.mean(vr, axis=-1)[..., None, None], 1e-30)
+                u = g / jnp.sqrt(denom + eps)
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g / jnp.sqrt(vr + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * u).astype(p.dtype), vr, vc
+
+        flat = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        is_t = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda x: x[0], flat, is_leaf=is_t),
+                AdafactorState(jax.tree.map(lambda x: x[1], flat, is_leaf=is_t),
+                               jax.tree.map(lambda x: x[2], flat, is_leaf=is_t),
+                               count))
+
+    return init, update

@@ -1,0 +1,59 @@
+"""AdamW with fp32 state over bf16 params (pytree-functional, shardable).
+
+State tensors inherit the parameter PartitionSpecs, so the 2D FSDP x TP
+layout automatically shards first/second moments (ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree
+               ) -> Tuple[PyTree, AdamWState]:
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        step_lr = lr_fn(count)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - step_lr * delta).astype(p.dtype)
+            return new_p, m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda x: x[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda x: x[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda x: x[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(new_mu, new_nu, count)
+
+    return init, update

@@ -1,0 +1,168 @@
+"""Sharded checkpointing with manifests, async writes, and auto-resume.
+
+Layout per step:
+    <dir>/step_<n>.tmp/ -> (atomic rename) -> <dir>/step_<n>/
+        manifest.json    tree structure, shapes, dtypes, content hashes
+        <leaf-id>.npy    one file per leaf (addressable shards gathered)
+
+Fault-tolerance contract:
+  * writes land in a .tmp dir and are renamed only after the manifest is
+    fsync'd -> a crash mid-write can never produce a "latest" checkpoint
+    that fails to load;
+  * `latest_step` only considers directories with a valid manifest whose
+    per-leaf hashes verify lazily on load;
+  * async mode runs the serialize+write on a worker thread; `wait()` joins
+    (called before the next save and at exit);
+  * keep_last prunes old checkpoints after a successful save.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3,
+                 async_write: bool = True):
+        self.dir = os.path.abspath(directory)
+        os.makedirs(self.dir, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---------- save ----------
+    def save(self, step: int, state: PyTree) -> None:
+        self.wait()
+        # materialize on host BEFORE handing to the worker (the train loop
+        # may donate/overwrite device buffers in the next step)
+        leaves, _ = _flatten(state)
+        host = [(k, np.asarray(jax.device_get(v))) for k, v in leaves]
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write_guarded(self, step: int, host) -> None:
+        try:
+            self._write(step, host)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, host) -> None:
+        tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}}
+        for i, (key, arr) in enumerate(host):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._prune()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {err!r}")
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------- load ----------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: PyTree, verify: bool = True,
+                shardings: Optional[PyTree] = None) -> PyTree:
+        """Restore into the structure of `like` (resharded if given)."""
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = _flatten(like)
+        restored = []
+        for key, leaf in leaves:
+            ent = manifest["leaves"].get(key)
+            if ent is None:
+                raise KeyError(f"checkpoint {step} missing leaf {key!r}")
+            arr = np.load(os.path.join(d, ent["file"]))
+            if verify:
+                h = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+                if h != ent["sha256"]:
+                    raise IOError(f"checkpoint corruption in {key!r}")
+            if list(arr.shape) != list(np.shape(leaf)):
+                raise ValueError(
+                    f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                    f"model {np.shape(leaf)} (elastic re-mesh requires "
+                    f"matching global shapes)")
+            restored.append(arr)
+        flat_like = jax.tree_util.tree_leaves(like)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), restored)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree
+
+    def restore_latest(self, like: PyTree, shardings: Optional[PyTree] = None
+                       ) -> Tuple[Optional[int], Optional[PyTree]]:
+        """Auto-resume: newest checkpoint that loads cleanly; corrupt ones
+        are skipped (the node-failure story: a partially written or damaged
+        checkpoint must not wedge the restart)."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, like, shardings=shardings)
+            except (IOError, KeyError, ValueError, json.JSONDecodeError):
+                continue
+        return None, None

@@ -1,0 +1,73 @@
+"""Checkpoint manager: roundtrip, corruption, pruning, auto-resume."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def _state(v=1.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.zeros((4,))},
+            "step": jnp.asarray(7)}
+
+
+def test_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    st = _state(3.0)
+    m.save(10, st)
+    like = {"params": {"w": np.zeros((4, 4)), "b": np.zeros((4,))},
+            "step": np.asarray(0)}
+    out = m.restore(10, like)
+    np.testing.assert_allclose(out["params"]["w"], 3.0)
+    assert int(out["step"]) == 7
+
+
+def test_async_write_then_wait(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=True)
+    m.save(1, _state())
+    m.wait()
+    assert m.latest_step() == 1
+
+
+def test_corruption_detected_and_skipped(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False, keep_last=10)
+    m.save(1, _state(1.0))
+    m.save(2, _state(2.0))
+    # corrupt step 2's first leaf
+    d = os.path.join(str(tmp_path), "step_0000000002")
+    leaf = os.path.join(d, "leaf_00000.npy")
+    arr = np.load(leaf)
+    np.save(leaf, arr + 99)
+    like = {"params": {"w": np.zeros((4, 4)), "b": np.zeros((4,))},
+            "step": np.asarray(0)}
+    with pytest.raises(IOError):
+        m.restore(2, like)
+    # auto-resume falls back to the newest INTACT checkpoint
+    step, out = m.restore_latest(like)
+    assert step == 1
+    np.testing.assert_allclose(out["params"]["w"], 1.0)
+
+
+def test_partial_write_never_visible(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000099.tmp"))
+    assert m.latest_step() is None      # tmp dirs are not checkpoints
+
+
+def test_keep_last_prunes(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False, keep_last=2)
+    for s in [1, 2, 3, 4]:
+        m.save(s, _state(float(s)))
+    assert m.all_steps() == [3, 4]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(1, _state())
+    like = {"params": {"w": np.zeros((8, 8)), "b": np.zeros((4,))},
+            "step": np.asarray(0)}
+    with pytest.raises(ValueError):
+        m.restore(1, like)

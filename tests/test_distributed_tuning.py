@@ -1,0 +1,17 @@
+"""Beyond-paper distributed-config tuning: space + objective plumbing."""
+from repro.core.distributed_tuning import distributed_space
+
+
+def test_space_enumerable():
+    sp = distributed_space("granite-34b", "train_4k", is_moe=False,
+                           is_train=True)
+    cfgs = sp.enumerate_valid()
+    assert len(cfgs) == 2 * 4 * 2 * 1
+    sp2 = distributed_space("qwen3-moe-30b-a3b", "train_4k", is_moe=True)
+    assert len(sp2.enumerate_valid()) == 2 * 4 * 2 * 3
+
+
+def test_serving_space_has_no_train_knobs():
+    sp = distributed_space("gemma-2b", "decode_32k", is_train=False)
+    for cfg in sp.enumerate_valid():
+        assert cfg["micro_steps"] == 1 and cfg["remat"] == 1

@@ -1,0 +1,52 @@
+"""Fault-tolerance logic with simulated clocks/failures."""
+import pytest
+
+from repro.train.fault import (ElasticPlan, FaultInjector, HeartbeatWatchdog,
+                               StragglerDetector, plan_elastic_remesh)
+
+
+def test_straggler_detection():
+    d = StragglerDetector(threshold=2.0, warmup_steps=2)
+    for i in range(5):
+        assert not d.observe(i, 1.0)
+    assert d.observe(5, 5.0)          # 5x the EMA
+    assert d.events[0][0] == 5
+    # straggler does not poison the EMA
+    assert d.ema == pytest.approx(1.0, rel=0.01)
+
+
+def test_watchdog_with_fake_clock():
+    t = [0.0]
+    wd = HeartbeatWatchdog(timeout_factor=3.0, min_timeout=10.0,
+                           clock=lambda: t[0])
+    for _ in range(5):
+        t[0] += 2.0
+        wd.beat()
+    assert not wd.poll()
+    t[0] += 9.0                        # < min_timeout
+    assert not wd.poll()
+    t[0] += 5.0                        # now past the 10s floor
+    assert wd.poll()
+
+
+def test_elastic_plan_keeps_model_axis():
+    plan = plan_elastic_remesh(available_chips=240, model_axis=16,
+                               target_batch=256)
+    assert plan.model_axis == 16
+    assert plan.data_axis == 15
+    assert plan.global_batch % (plan.data_axis * plan.pod_axis) == 0
+    assert plan.dropped_chips == 240 - 15 * 16
+
+
+def test_elastic_plan_insufficient_chips():
+    with pytest.raises(ValueError):
+        plan_elastic_remesh(available_chips=8, model_axis=16,
+                            target_batch=256)
+
+
+def test_fault_injector_fires_once():
+    inj = FaultInjector(fail_at_steps=(3,))
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)                  # second pass (post-restart) proceeds

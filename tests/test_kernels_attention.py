@@ -1,0 +1,58 @@
+"""Flash-attention Pallas kernel + XLA chunked path vs reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as A
+from repro.kernels.attention.ops import attention
+from repro.kernels.attention.ref import attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(BH, Lq, Lk, D):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (BH, Lq, D), jnp.float32),
+            jax.random.normal(ks[1], (BH, Lk, D), jnp.float32),
+            jax.random.normal(ks[2], (BH, Lk, D), jnp.float32))
+
+
+@pytest.mark.parametrize("bq,bk", [(128, 128), (64, 256), (256, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_blocks_sweep(bq, bk, causal):
+    q, k, v = _qkv(2, 256, 256, 64)
+    ref = attention_ref(q, k, v, causal=causal)
+    got = attention(q, k, v, causal=causal,
+                    config={"block_q": bq, "block_k": bk}, interpret=True)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_local_window():
+    q, k, v = _qkv(2, 512, 512, 64)
+    ref = attention_ref(q, k, v, causal=True, window=128)
+    got = attention(q, k, v, causal=True, window=128,
+                    config={"block_q": 128, "block_k": 128}, interpret=True)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_uses_ref_path():
+    q, k, v = _qkv(4, 1, 300, 64)
+    ref = attention_ref(q, k, v, causal=True)
+    got = attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_chunked_xla_attention_exact(monkeypatch):
+    B, L, H, D = 2, 2048, 4, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, L, H, D))
+    k = jax.random.normal(ks[1], (B, L, H, D))
+    v = jax.random.normal(ks[2], (B, L, H, D))
+    ref = A._attention_core(q, k, v, causal=True, window=None,
+                            compute_dtype=jnp.float32, model_axis=0,
+                            q_offset=0)
+    monkeypatch.setattr(A, "_SCORE_ELEMS_LIMIT", 1024 * 1024)
+    got = A._attention_4d(q, k, v, causal=True, window=None,
+                          compute_dtype=jnp.float32)
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)

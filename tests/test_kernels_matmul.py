@@ -1,0 +1,36 @@
+"""Tiled matmul kernel vs jnp.dot."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (256, 256, 256, 128, 128, 128),
+    (256, 384, 512, 128, 256, 128),
+    (128, 128, 128, 128, 128, 128),
+    (512, 256, 256, 256, 128, 256),
+])
+def test_matmul_block_sweep(m, k, n, bm, bn, bk):
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), jnp.float32)
+    got = matmul(a, b, config={"block_m": bm, "block_n": bn, "block_k": bk},
+                 interpret=True)
+    np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a = jax.random.normal(KEY, (128, 128), dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 128), dtype)
+    got = matmul(a, b, config={"block_m": 128, "block_n": 128,
+                               "block_k": 128}, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(matmul_ref(a, b), np.float32),
+                               rtol=tol, atol=tol * 20)

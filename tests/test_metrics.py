@@ -1,0 +1,49 @@
+"""Phi performance-portability metric properties (paper §VI)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.metrics import efficiency, phi, phi_from_times
+
+
+def test_perfect_match_is_one():
+    assert phi([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+
+
+def test_known_value():
+    # harmonic mean of (1, 0.5) = 2/(1+2) = 0.666...
+    assert phi([1.0, 0.5]) == pytest.approx(2.0 / 3.0)
+
+
+@given(st.lists(st.floats(min_value=0.05, max_value=1.0), min_size=1,
+                max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_phi_bounded_by_min_and_max(effs):
+    v = phi(effs)
+    assert min(effs) - 1e-9 <= v <= max(effs) + 1e-9
+
+
+@given(st.lists(st.floats(min_value=0.05, max_value=1.0), min_size=2,
+                max_size=8),
+       st.integers(min_value=0, max_value=7))
+@settings(max_examples=50, deadline=None)
+def test_phi_monotone_in_each_coordinate(effs, idx):
+    idx = idx % len(effs)
+    lower = list(effs)
+    lower[idx] = max(lower[idx] * 0.5, 0.01)
+    assert phi(lower) <= phi(effs) + 1e-12
+
+
+def test_phi_from_times():
+    best = {128: 1.0, 256: 2.0}
+    mine = {128: 1.0, 256: 4.0}      # eff = 1.0, 0.5
+    assert phi_from_times(mine, best) == pytest.approx(2.0 / 3.0)
+    with pytest.raises(ValueError):
+        phi_from_times({128: 1.0}, best)
+
+
+def test_efficiency_clamped():
+    assert efficiency(2.0, 1.0) == pytest.approx(0.5)
+    assert efficiency(0.5, 1.0) == 1.0      # can't beat the observed best
+    with pytest.raises(ValueError):
+        efficiency(-1.0, 1.0)

@@ -1,0 +1,38 @@
+"""Large-problem multi-pass tuning (paper §IV-C)."""
+import pytest
+
+from repro.core import Workload, build_space, BayesianTuner, CachedObjective
+from repro.core.multikernel import (MultiPassObjective, analytical_multipass,
+                                    max_resident_tile, num_passes)
+
+
+def test_num_passes():
+    assert num_passes(2**20, 2**10) == 2
+    assert num_passes(2**23, 2**10) == 3     # paper: N >= 2^19 -> 3 kernels
+    assert num_passes(2**10, 2**10) == 1
+
+
+def test_analytical_multipass_minimizes_m():
+    wl = Workload(op="large_fft", n=2**20, batch=64, variant="stockham")
+    plan = analytical_multipass(wl)
+    assert plan.m == num_passes(wl.n, max_resident_tile(wl))
+    assert len(plan.passes) == plan.m
+    assert all(p["tile_n"] == plan.tile_n for p in plan.passes)
+
+
+def test_multipass_objective_valid():
+    wl = Workload(op="large_fft", n=2**20, batch=64, variant="stockham")
+    space = build_space(wl)
+    obj = MultiPassObjective()
+    cfg = space.enumerate_valid()[0]
+    m = obj(space, cfg)
+    assert m.valid and m.time_s > 0
+    assert m.meta["m"] >= 1
+
+
+def test_bo_on_multipass_space():
+    wl = Workload(op="large_fft", n=2**20, batch=64, variant="stockham")
+    space = build_space(wl)
+    res = BayesianTuner(seed=0, max_evals=24).tune(
+        space, CachedObjective(MultiPassObjective()))
+    assert space.is_valid(res.best_config)

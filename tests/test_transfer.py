@@ -1,0 +1,37 @@
+"""Transfer (multi-task) tuning: GPTune's cross-size amortization."""
+import numpy as np
+
+from repro.core import (BayesianTuner, CachedObjective, ExhaustiveSearch,
+                        TPUCostModelObjective, Workload, build_space)
+from repro.core.transfer import TaskHistory, TransferBayesianTuner, \
+    tune_family
+
+
+def _obj():
+    return CachedObjective(TPUCostModelObjective(noise=0.02))
+
+
+def test_transfer_reduces_evaluations_at_equal_quality():
+    sizes = [128, 256, 512, 1024]
+    fam = tune_family("scan", "lf", sizes, lambda n: 2**26 // n, _obj,
+                      seed=0)
+    effs_t, tot_t = [], 0
+    effs_p, tot_p = [], 0
+    for n in sizes:
+        sp = build_space(Workload(op="scan", n=n, batch=2**26 // n,
+                                  variant="lf"))
+        best = ExhaustiveSearch().tune(sp, _obj()).best_time
+        tot_t += fam[n].evaluations
+        effs_t.append(min(best / fam[n].best_time, 1.0))
+        bo = BayesianTuner(seed=0).tune(sp, _obj())
+        tot_p += bo.evaluations
+        effs_p.append(min(best / bo.best_time, 1.0))
+    assert tot_t < tot_p                       # fewer evaluations...
+    assert np.mean(effs_t) > np.mean(effs_p) - 0.02   # ...no quality loss
+
+
+def test_transfer_without_history_still_works():
+    wl = Workload(op="fft", n=512, batch=2**17, variant="stockham")
+    sp = build_space(wl)
+    res = TransferBayesianTuner(seed=1).tune(sp, _obj(), histories=())
+    assert sp.is_valid(res.best_config)

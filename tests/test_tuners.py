@@ -1,0 +1,97 @@
+"""The three tuning methodologies + TuningDB (paper core behaviours)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticalTuner, BayesianTuner, CachedObjective,
+                        ExhaustiveSearch, RandomSearch, TPUCostModelObjective,
+                        TuningDB, Workload, build_space, get_config,
+                        tune_offline)
+from repro.core.objective import Measurement, PENALTY_TIME
+
+
+def _space(n=512, batch=2**17, op="scan", variant="lf"):
+    return build_space(Workload(op=op, n=n, batch=batch, variant=variant))
+
+
+def test_analytical_returns_valid_config():
+    for op, variant in [("scan", "lf"), ("tridiag", "wm"),
+                        ("fft", "stockham"), ("attention", "flash")]:
+        space = _space(op=op, variant=variant)
+        cfg = AnalyticalTuner().suggest(space)
+        assert space.is_valid(cfg)
+
+
+def test_analytical_zero_evaluations():
+    space = _space()
+    obj = CachedObjective(TPUCostModelObjective())
+    AnalyticalTuner().suggest(space)
+    assert obj.evaluations == 0    # online methodology: no measurements
+
+
+def test_exhaustive_finds_global_optimum():
+    space = _space(n=256, batch=2**18)
+    obj = CachedObjective(TPUCostModelObjective())
+    res = ExhaustiveSearch().tune(space, obj)
+    times = [obj(space, c).time_s for c in space.enumerate_valid()]
+    assert res.best_time == pytest.approx(min(times))
+
+
+def test_bayesian_beats_random_at_equal_budget():
+    """Aggregate over several sizes/seeds: BO efficiency >= random's."""
+    wins, total = 0, 0
+    for n in [256, 512, 1024]:
+        space = _space(n=n)
+        ex = ExhaustiveSearch().tune(
+            space, CachedObjective(TPUCostModelObjective(noise=0.02)))
+        for seed in range(3):
+            bo = BayesianTuner(seed=seed, max_evals=20).tune(
+                space, CachedObjective(TPUCostModelObjective(noise=0.02)))
+            rnd = RandomSearch(max_evals=bo.evaluations, seed=seed).tune(
+                space, CachedObjective(TPUCostModelObjective(noise=0.02)))
+            wins += bo.best_time <= rnd.best_time + 1e-12
+            total += 1
+    assert wins >= total * 0.6
+
+
+def test_bayesian_sliding_window_stop():
+    space = _space(n=256)
+    bo = BayesianTuner(seed=0, max_evals=1000, patience=5).tune(
+        space, CachedObjective(TPUCostModelObjective()))
+    assert bo.evaluations < space.size()
+    assert bo.stopped_by in ("sliding_window", "exhausted")
+
+
+def test_invalid_configs_get_penalty():
+    space = _space(n=256)
+    obj = TPUCostModelObjective()
+    bad = {"tile_n": 999, "rows_per_program": 1, "radix": 2, "unroll": 1,
+           "in_register": 0}
+    m = obj(space, bad)
+    assert not m.valid and m.time_s == PENALTY_TIME
+
+
+def test_tuning_db_roundtrip(tmp_path):
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    wl = Workload(op="scan", n=512, batch=1024, variant="lf")
+    assert db.lookup(wl) is None
+    db.store(wl, {"tile_n": 512}, 1e-4, "bayesian", 12)
+    assert db.lookup(wl) == {"tile_n": 512}
+    db2 = TuningDB(path=str(tmp_path / "db.json"))
+    assert db2.lookup(wl) == {"tile_n": 512}   # persisted
+
+
+def test_get_config_online_fallback(tmp_path):
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    wl = Workload(op="scan", n=256, batch=4096, variant="ks")
+    cfg = get_config(wl, db=db)                # miss -> analytical, instant
+    assert build_space(wl).is_valid(cfg)
+
+
+def test_tune_offline_populates_db(tmp_path):
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    wl = Workload(op="fft", n=256, batch=2**18, variant="stockham")
+    res = tune_offline(wl, method="bayesian", db=db)
+    assert db.lookup(wl) == res.best_config
+    assert res.evaluations > 0
