@@ -1,0 +1,63 @@
+"""Micro-benchmark: online config-resolution hot path.
+
+Compares, for a warm workload:
+  * seed-style miss path — what every kernel call paid before the
+    TunerSession existed on a DB miss: re-run the analytical model over the
+    enumerated space, then re-fit the dict;
+  * session resolve (warm) — the new hot path: LRU hit + copy.
+
+Emits CSV rows (name,metric,value) and asserts the acceptance criterion
+(warm resolve >= 10x faster than the miss path).
+
+    PYTHONPATH=src python benchmarks/bench_resolve.py
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.core import Workload, build_space
+from repro.core.analytical import AnalyticalTuner
+from repro.core.space import normalize_config
+from repro.tuning import TunerSession
+
+WORKLOADS = [
+    Workload(op="scan", n=512, batch=2**17, variant="lf"),
+    Workload(op="tridiag", n=256, batch=2**14, variant="wm"),
+    Workload(op="fft", n=1024, batch=2**12, variant="stockham"),
+    Workload(op="attention", n=2048, batch=64, variant="flash"),
+]
+
+
+def timeit(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(emit) -> float:
+    session = TunerSession(db_path=tempfile.mktemp(suffix="_bench_db.json"))
+    worst = float("inf")
+    for wl in WORKLOADS:
+        tuner = AnalyticalTuner()
+
+        def miss_path(wl=wl, tuner=tuner):
+            cfg = tuner.suggest(build_space(wl))
+            return normalize_config(cfg, wl)
+
+        session.resolve(wl)                      # prime the LRU
+        t_miss = timeit(miss_path, 5)
+        t_warm = timeit(lambda wl=wl: session.resolve(wl), 200)
+        speedup = t_miss / max(t_warm, 1e-12)
+        worst = min(worst, speedup)
+        emit(f"resolve,{wl.op}:{wl.variant},miss_us,{t_miss*1e6:.1f}")
+        emit(f"resolve,{wl.op}:{wl.variant},warm_us,{t_warm*1e6:.2f}")
+        emit(f"resolve,{wl.op}:{wl.variant},speedup,{speedup:.0f}")
+    return worst
+
+
+if __name__ == "__main__":
+    worst = run(print)
+    assert worst >= 10, f"warm resolve only {worst:.1f}x faster than miss path"
+    print(f"# acceptance ok: worst-case speedup {worst:.0f}x (>= 10x)")

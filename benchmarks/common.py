@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AnalyticalTuner, BayesianTuner, CachedObjective,
-                        ExhaustiveSearch, TPUCostModelObjective, Workload,
-                        build_space)
+from repro.core import (AnalyticalTuner, CachedObjective,
+                        TPUCostModelObjective, Workload, build_space)
+from repro.tuning import get_strategy
 
 HOST_ELEMS = 2 ** 20        # host-sized "2^26" stand-in (CPU wall-clock)
 NOISE = 0.02                # cost-model jitter ~ the paper's run-to-run 2%
@@ -42,15 +42,16 @@ def median_time(thunk: Callable[[], None], reps: int = 5,
 
 
 def tune_all_methods(wl: Workload, seed: int = 0) -> Dict[str, Dict]:
-    """Run exhaustive + analytical + BO on the device model; returns per-
-    method {config, time_s, evals, efficiency}."""
+    """Run exhaustive + analytical + BO on the device model via the
+    repro.tuning strategy registry; returns per-method
+    {config, time_s, evals, efficiency}."""
     space = build_space(wl)
     obj = CachedObjective(TPUCostModelObjective(noise=NOISE))
-    ex = ExhaustiveSearch().tune(space, obj)
+    ex = get_strategy("exhaustive")(space, obj, seed=seed)
     ana_cfg = AnalyticalTuner().suggest(space)
     t_ana = obj(space, ana_cfg).time_s
-    bo = BayesianTuner(seed=seed).tune(
-        space, CachedObjective(TPUCostModelObjective(noise=NOISE)))
+    bo = get_strategy("bayesian")(
+        space, CachedObjective(TPUCostModelObjective(noise=NOISE)), seed=seed)
     return {
         "exhaustive": {"config": ex.best_config, "time_s": ex.best_time,
                        "evals": ex.evaluations, "efficiency": 1.0},

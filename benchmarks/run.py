@@ -5,7 +5,8 @@ Prints ``name,...`` CSV rows:
       tuning methodology (+ `-host` rows: genuine wall-clock on this host);
   table2              — average performance + Phi per (op, methodology);
   fig4 / fig4d        — BO candidate-evaluation counts (+ control vs random);
-  roofline            — per (arch x shape) three-term roofline summary.
+  roofline            — per (arch x shape) three-term roofline summary;
+  resolve             — TunerSession online hot-path vs seed miss path.
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: prefix_ops,convergence,roofline")
+                    help="comma list: prefix_ops,convergence,roofline,resolve")
     ap.add_argument("--no-host-wallclock", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -36,6 +37,9 @@ def main() -> None:
     if only is None or "roofline" in only:
         from benchmarks.bench_roofline import run as run_roof
         run_roof(emit)
+    if only is None or "resolve" in only:
+        from benchmarks.bench_resolve import run as run_resolve
+        run_resolve(emit)
     print(f"# benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 

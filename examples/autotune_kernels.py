@@ -1,12 +1,18 @@
 """The full paper workflow: exhaustive vs analytical vs Bayesian tuning on
-every prefix-op family, with Table-II-style Phi reporting.
+every prefix-op family, with Table-II-style Phi reporting — driven through
+the `repro.tuning` API (strategy registry + TunerSession).
 
     PYTHONPATH=src python examples/autotune_kernels.py
 """
-import numpy as np
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.core import Workload
 from repro.core.metrics import phi
+from repro.tuning import TunerSession
 from benchmarks.common import tune_all_methods
 
 CASES = [("scan", "lf", [128, 256, 512, 1024]),
@@ -15,16 +21,28 @@ CASES = [("scan", "lf", [128, 256, 512, 1024]),
          ("tridiag", "pcr", [64, 128, 256, 512]),
          ("fft", "stockham", [64, 256, 1024, 4096])]
 
+# winners land in a session-owned DB: the offline half of the paper's flow
+session = TunerSession(db_path=tempfile.mktemp(suffix="_autotune_db.json"))
+
 print(f"{'op':22s} {'PHI_analytical':>15s} {'PHI_bayesian':>13s} "
       f"{'BO evals':>9s}")
 for op, variant, sizes in CASES:
     effs = {"analytical": [], "bayesian": []}
     evals = []
     for n in sizes:
-        res = tune_all_methods(
-            Workload(op=op, n=n, batch=max(2**26 // n, 1), variant=variant))
+        wl = Workload(op=op, n=n, batch=max(2**26 // n, 1), variant=variant)
+        res = tune_all_methods(wl)
+        session.db.store(wl, res["bayesian"]["config"],
+                         res["bayesian"]["time_s"], "bayesian",
+                         res["bayesian"]["evals"])
         effs["analytical"].append(res["analytical"]["efficiency"])
         effs["bayesian"].append(res["bayesian"]["efficiency"])
         evals.append(res["bayesian"]["evals"])
     print(f"{op+'-'+variant:22s} {phi(effs['analytical']):15.4f} "
           f"{phi(effs['bayesian']):13.4f} {str(evals):>9s}")
+
+# online half: every stored workload resolves instantly from the session
+warm = session.resolve(Workload(op="scan", n=1024, batch=2**26 // 1024,
+                                variant="ks"))
+print(f"\nwarm online resolve (DB-backed): {warm}")
+print(f"session stats: {session.stats()}")

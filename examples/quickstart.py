@@ -1,4 +1,5 @@
-"""Quickstart: tune a kernel offline, use it online — the paper's flow.
+"""Quickstart: tune a kernel offline, use it online — the paper's flow,
+through the `repro.tuning` session API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,21 +7,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (TuningDB, Workload, get_config, tune_offline)
+from repro.core import Workload
 from repro.kernels.scan.ops import prefix_sum
 from repro.kernels.scan.ref import scan_add_ref
+from repro.tuning import TunerSession, overrides
 
-db = TuningDB(path="/tmp/quickstart_db.json")
+session = TunerSession(db_path="/tmp/quickstart_db.json")
 
 # 1. offline: Bayesian-optimization search on the TPU device model
 wl = Workload(op="scan", n=1024, batch=65536, variant="ks")
-result = tune_offline(wl, method="bayesian", db=db)
+result = session.tune(wl, method="bayesian")
 print(f"offline BO: best={result.best_config} "
       f"t={result.best_time*1e6:.1f}us evals={result.evaluations}")
 
-# 2. online: the kernel launcher reads the DB (or falls back to the
-#    zero-evaluation analytical model for unseen workloads)
-cfg = get_config(wl, db=db)
+# 2. online: resolve() reads the DB (or falls back to the zero-evaluation
+#    analytical model for unseen workloads) and caches the resolved config
+cfg = session.resolve(wl)
 print(f"online config: {cfg}")
 
 # 3. run the tuned kernel (interpret mode validates the Pallas body on CPU)
@@ -31,4 +33,10 @@ print(f"tuned scan matches oracle: max_err={err:.2e}")
 
 # 4. an unseen workload: analytical answer, no evaluations needed
 wl2 = Workload(op="scan", n=2048, batch=32768, variant="ks")
-print(f"online (analytical, cold): {get_config(wl2, db=db)}")
+print(f"online (analytical, cold): {session.resolve(wl2)}")
+
+# 5. scoped experiments: force knobs without touching the DB
+with overrides(scan={"radix": 4}):
+    y4 = prefix_sum(x, interpret=True)
+print(f"override radix=4 matches: "
+      f"{float(jnp.max(jnp.abs(y4 - scan_add_ref(x)))):.2e}")

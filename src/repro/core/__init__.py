@@ -7,6 +7,7 @@ Public API:
   ExhaustiveSearch, RandomSearch
   phi, efficiency            — portability metric (paper VI)
   TuningDB, get_config, tune_offline — offline/online deployment flow
+                               (deprecated shims; use repro.tuning)
 """
 from repro.core.analytical import AnalyticalTuner
 from repro.core.bayesian import BayesianTuner, TuneResult

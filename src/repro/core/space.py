@@ -18,6 +18,8 @@ import itertools
 import math
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.hw.tpu import V5E, TpuSpec, dtype_bytes
 
 Config = Dict[str, int]
@@ -58,6 +60,20 @@ class Workload:
     @property
     def key(self) -> str:
         return f"{self.op}:{self.variant or 'default'}:n{self.n}:b{self.batch}:{self.dtype}"
+
+    def canonical(self) -> "Workload":
+        """Canonical form: int dims, batch >= 1, dtype as a numpy name.
+
+        Every config-resolution entry point funnels through this so that
+        e.g. ``dtype=jnp.float32`` and ``dtype="float32"`` hit the same DB
+        and cache keys.
+        """
+        dtype = self.dtype if isinstance(self.dtype, str) \
+            else np.dtype(self.dtype).name
+        n, batch = int(self.n), max(int(self.batch), 1)
+        if dtype == self.dtype and n == self.n and batch == self.batch:
+            return self
+        return dataclasses.replace(self, n=n, batch=batch, dtype=dtype)
 
 
 @dataclasses.dataclass
@@ -330,3 +346,36 @@ def build_space(wl: Workload) -> SearchSpace:
 
 def register_space(op: str, builder: Callable[[Workload], SearchSpace]) -> None:
     _SPACE_BUILDERS[op] = builder
+
+
+# ---------------------------------------------------------------------------
+# Shared config normalization (launch-geometry fitting)
+# ---------------------------------------------------------------------------
+# Tuned configs are stored for the workload they were searched on; at launch
+# time the knobs must still divide the actual array dims (a stored tile of
+# 512 against n=384, say). Every kernel family used to carry its own copy of
+# this halving descent; it lives here now and per-op normalizers in
+# kernels/*/ops.py compose it.
+
+def fit_block(value: int, dim: int) -> int:
+    """Largest v <= min(value, dim) reachable by halving with dim % v == 0."""
+    v = int(max(min(value, dim), 1))
+    while dim % v:
+        v //= 2
+    return max(v, 1)
+
+
+def normalize_config(cfg: Mapping[str, int], wl: Workload,
+                     dims: Optional[Mapping[str, int]] = None) -> Config:
+    """Generic normalizer: snap row/tile knobs to the workload dims.
+
+    Per-op normalizers registered via ``repro.tuning.tuned_kernel`` take
+    precedence; this fallback handles any op without one.
+    """
+    out = dict(cfg)
+    if "rows_per_program" in out:
+        out["rows_per_program"] = fit_block(out["rows_per_program"],
+                                            max(wl.batch, 1))
+    if "tile_n" in out:
+        out["tile_n"] = fit_block(out["tile_n"], wl.n)
+    return out

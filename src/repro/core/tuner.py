@@ -1,122 +1,63 @@
-"""Tuner facade + persistent TuningDB (offline -> online handoff).
+"""Deprecated tuner facade — use :mod:`repro.tuning` instead.
 
-The paper's deployment story: offline, run the expensive searches and store
-the winning configuration per (op, variant, N, batch, dtype, platform);
-online, kernels look their configuration up, and on a miss the analytical
-model answers immediately with zero evaluations (its headline advantage).
+Historical entry points (``get_config``, ``tune_offline``, ``global_db``)
+now delegate to a :class:`repro.tuning.TunerSession` and emit
+``DeprecationWarning``. They return the same configs as before: the shims
+resolve *raw* (pre-normalization) configs, exactly like the old code, so
+legacy callers that validate against the search space keep working.
+
+``TuningDB`` lives in :mod:`repro.tuning.db`; the re-export here keeps
+``from repro.core import TuningDB`` imports alive.
 """
 from __future__ import annotations
 
-import json
-import os
-import threading
-from typing import Callable, Dict, Optional
+import warnings
+from typing import Optional
 
-from repro.core.analytical import AnalyticalTuner
-from repro.core.bayesian import BayesianTuner, TuneResult
-from repro.core.exhaustive import ExhaustiveSearch, RandomSearch
-from repro.core.objective import Objective, TPUCostModelObjective, CachedObjective
-from repro.core.space import Config, SearchSpace, Workload, build_space
+from repro.core.bayesian import TuneResult
+from repro.core.objective import Objective
+from repro.core.space import Config, Workload
+from repro.tuning.db import DEFAULT_DB_PATH, TuningDB
 
-DEFAULT_DB_PATH = os.environ.get(
-    "REPRO_TUNING_DB", os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                                    "artifacts", "tuning_db.json"))
+__all__ = ["DEFAULT_DB_PATH", "TuningDB", "get_config", "global_db",
+           "tune_offline"]
 
 
-class TuningDB:
-    """JSON-backed config store; thread-safe; content-addressed by workload key."""
-
-    def __init__(self, path: Optional[str] = None, platform: str = "tpu_v5e"):
-        self.path = os.path.abspath(path or DEFAULT_DB_PATH)
-        self.platform = platform
-        self._lock = threading.Lock()
-        self._data: Dict[str, Dict] = {}
-        self._loaded = False
-
-    def _load(self) -> None:
-        if self._loaded:
-            return
-        if os.path.exists(self.path):
-            try:
-                with open(self.path) as f:
-                    self._data = json.load(f)
-            except (json.JSONDecodeError, OSError):
-                self._data = {}
-        self._loaded = True
-
-    def _key(self, wl: Workload) -> str:
-        return f"{self.platform}|{wl.key}"
-
-    def lookup(self, wl: Workload) -> Optional[Config]:
-        with self._lock:
-            self._load()
-            entry = self._data.get(self._key(wl))
-            return dict(entry["config"]) if entry else None
-
-    def store(self, wl: Workload, cfg: Config, time_s: float, method: str,
-              evaluations: int = 0) -> None:
-        with self._lock:
-            self._load()
-            self._data[self._key(wl)] = {
-                "config": cfg, "time_s": time_s, "method": method,
-                "evaluations": evaluations,
-            }
-            os.makedirs(os.path.dirname(self.path), exist_ok=True)
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(self._data, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-
-    def entries(self) -> Dict[str, Dict]:
-        with self._lock:
-            self._load()
-            return dict(self._data)
+def _warn(old: str, new: str) -> None:
+    warnings.warn(f"repro.core.tuner.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
-_GLOBAL_DB: Optional[TuningDB] = None
-_ANALYTICAL = AnalyticalTuner()
+def _session(db: Optional[TuningDB]):
+    from repro.tuning.session import TunerSession, default_session
+
+    if db is None:
+        return default_session()
+    # cache the session on the db itself (same lifetime, no global registry)
+    # so analytical memoization and the resolve cache still apply per DB
+    session = getattr(db, "_legacy_session", None)
+    if session is None:
+        session = db._legacy_session = TunerSession(db=db)
+    return session
 
 
 def global_db() -> TuningDB:
-    global _GLOBAL_DB
-    if _GLOBAL_DB is None:
-        _GLOBAL_DB = TuningDB()
-    return _GLOBAL_DB
+    """Deprecated: the default session's DB."""
+    _warn("global_db()", "repro.tuning.default_session().db")
+    return _session(None).db
 
 
 def get_config(wl: Workload, db: Optional[TuningDB] = None) -> Config:
-    """Online entry point used by every kernel launcher.
-
-    DB hit -> stored (offline-tuned) config; miss -> analytical model, which
-    needs no evaluations (paper's recommendation for online tuning).
-    """
-    db = db or global_db()
-    cfg = db.lookup(wl)
-    if cfg is not None:
-        return cfg
-    return _ANALYTICAL.suggest(build_space(wl))
+    """Deprecated online entry point: DB hit, else analytical suggestion."""
+    _warn("get_config()", "repro.tuning.TunerSession.resolve")
+    return _session(db).resolve_raw(wl)
 
 
 def tune_offline(wl: Workload, method: str = "bayesian",
                  objective: Optional[Objective] = None,
                  db: Optional[TuningDB] = None, seed: int = 0,
                  max_evals: int = 64) -> TuneResult:
-    """Offline tuning pass; persists the winner into the DB."""
-    space = build_space(wl)
-    objective = objective or TPUCostModelObjective()
-    cached = CachedObjective(objective)
-    if method == "bayesian":
-        result = BayesianTuner(seed=seed, max_evals=max_evals).tune(space, cached)
-    elif method == "exhaustive":
-        result = ExhaustiveSearch().tune(space, cached)
-    elif method == "random":
-        result = RandomSearch(max_evals=max_evals, seed=seed).tune(space, cached)
-    elif method == "analytical":
-        cfg = _ANALYTICAL.suggest(space)
-        m = cached(space, cfg)
-        result = TuneResult(cfg, m.time_s, 0, [(cfg, m.time_s)], "analytical")
-    else:
-        raise ValueError(f"unknown tuning method {method!r}")
-    (db or global_db()).store(wl, result.best_config, result.best_time,
-                              method, result.evaluations)
-    return result
+    """Deprecated offline tuning pass; persists the winner into the DB."""
+    _warn("tune_offline()", "repro.tuning.TunerSession.tune")
+    return _session(db).tune(wl, method=method, objective=objective,
+                             seed=seed, max_evals=max_evals)

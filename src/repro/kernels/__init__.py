@@ -1,5 +1,6 @@
 # Pallas TPU kernels for the compute hot-spots the paper tunes (scan,
 # tridiagonal solvers, FFT) plus the framework's own hot kernels (SSD,
 # RG-LRU, flash attention, matmul). Each subpackage: kernel.py
-# (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper consuming the
-# TuningDB), ref.py (pure-jnp oracle).
+# (pl.pallas_call + BlockSpec), ops.py (the public entry point, declared
+# with @repro.tuning.tuned_kernel and resolving its config through the
+# TunerSession), ref.py (pure-jnp oracle).

@@ -1,0 +1,10 @@
+"""Pallas API compatibility across jax versions.
+
+Newer jax exposes ``pltpu.CompilerParams``; older releases call the same
+dataclass ``pltpu.TPUCompilerParams``. Kernels import the name from here so
+they compile on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -4,17 +4,26 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import Workload, get_config
+from repro.core.space import Workload, attention_space, fit_block
 from repro.kernels.attention.kernel import flash_attention_pallas
 from repro.kernels.attention.ref import attention_ref
+from repro.tuning import default_session, plan_execution, tuned_kernel
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _normalize(cfg, wl, dims=None):
+    """Fit flash block sizes to the actual (Lq, Lk); wl.n only carries Lk,
+    so the entry point passes both lengths through ``dims``."""
+    dims = dims or {}
+    lq = int(dims.get("lq", wl.n))
+    lk = int(dims.get("lk", wl.n))
+    return {"block_q": fit_block(cfg.get("block_q", 256), lq),
+            "block_k": fit_block(cfg.get("block_k", 256), lk)}
 
 
+@tuned_kernel("attention", space=attention_space,
+              pallas=flash_attention_pallas, reference=attention_ref,
+              normalize=_normalize, variants=("flash",))
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: Optional[int] = None,
               config: Optional[dict] = None,
@@ -28,19 +37,11 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     BH, lq, d = q.shape
     lk = k.shape[1]
-    if use_pallas is None:
-        use_pallas = ((not _on_cpu()) or bool(interpret)) and lq > 1
+    use_pallas, interpret = plan_execution(use_pallas, interpret, gate=lq > 1)
     if not use_pallas or lq == 1:
         return attention_ref(q, k, v, causal=causal, window=window)
-    interpret = _on_cpu() if interpret is None else interpret
-    cfg = config or get_config(Workload(op="attention", n=lk, batch=BH,
-                                        variant="flash"))
-    bq = min(cfg.get("block_q", 256), lq)
-    while lq % bq:
-        bq //= 2
-    bk = min(cfg.get("block_k", 256), lk)
-    while lk % bk:
-        bk //= 2
-    return flash_attention_pallas(q, k, v, block_q=max(bq, 1),
-                                  block_k=max(bk, 1), causal=causal,
-                                  window=window, interpret=interpret)
+    cfg = default_session().resolve(
+        Workload(op="attention", n=lk, batch=BH, variant="flash"),
+        config=config, dims={"lq": lq, "lk": lk})
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interpret, **cfg)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _cmul(ar, ai, br, bi):
     return ar * br - ai * bi, ar * bi + ai * br
@@ -87,7 +89,7 @@ def fft_pallas(re: jax.Array, im: jax.Array, *, rows_per_program: int = 4,
         in_specs=[spec, spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct(re.shape, re.dtype)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(re, im)

@@ -2,7 +2,7 @@
 
 `fft(x)` — x complex (batch, n):
   * n <= max in-VMEM tile: single Stockham kernel launch, radix/rows from
-    the TuningDB (paper §V-C small/medium sizes);
+    the TunerSession (paper §V-C small/medium sizes);
   * larger n: Bailey four-step decomposition N = n1*n2 — column FFTs,
     twiddle, row FFTs, transpose — i.e. the paper's §IV-C multi-kernel
     strategy with m kernels; the tile split n1 comes from the tuned
@@ -15,52 +15,58 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import Workload, get_config
+from repro.core.space import Workload, fft_space, fit_block, large_fft_space
 from repro.core.multikernel import max_resident_tile
 from repro.kernels.fft.kernel import fft_pallas
+from repro.kernels.fft.ref import fft_ref
+from repro.tuning import default_session, on_cpu, tuned_kernel
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _normalize(cfg, wl, dims=None):
+    """Raw Stockham knobs; rows are re-fitted per sub-launch (the four-step
+    path runs the kernel at several different sub-batch sizes)."""
+    return {"radix": cfg.get("radix", 2),
+            "rows_per_program": cfg.get("rows_per_program", 4),
+            "tile_n": cfg.get("tile_n", 2048)}
 
 
 def _kernel_fft(x: jax.Array, radix: int, rows: int, inverse: bool,
                 interpret: bool) -> jax.Array:
     batch, n = x.shape
-    rows = max(min(rows, batch), 1)
-    while batch % rows:
-        rows //= 2
+    rows = fit_block(rows, batch)
     re, im = jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
-    yre, yim = fft_pallas(re, im, rows_per_program=max(rows, 1), radix=radix,
+    yre, yim = fft_pallas(re, im, rows_per_program=rows, radix=radix,
                           inverse=inverse, interpret=interpret)
     return (yre + 1j * yim).astype(jnp.complex64)
 
 
+@tuned_kernel("fft", space=fft_space, pallas=fft_pallas, reference=fft_ref,
+              normalize=_normalize, variants=("stockham",))
 def fft(x: jax.Array, config: Optional[dict] = None,
         interpret: Optional[bool] = None, inverse: bool = False) -> jax.Array:
     batch, n = x.shape
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = on_cpu() if interpret is None else interpret
+    session = default_session()
     wl_small = Workload(op="fft", n=n, batch=batch, variant="stockham")
     max_tile = max_resident_tile(wl_small)
     if n <= max_tile:
-        cfg = config or get_config(wl_small)
-        return _kernel_fft(x, cfg.get("radix", 2),
-                           cfg.get("rows_per_program", 4), inverse, interpret)
+        cfg = session.resolve(wl_small, config=config)
+        return _kernel_fft(x, cfg["radix"], cfg["rows_per_program"],
+                           inverse, interpret)
 
     # ---- four-step multi-kernel path ----
-    cfg = config or get_config(
-        Workload(op="large_fft", n=n, batch=batch, variant="stockham"))
-    n1 = min(cfg.get("tile_n", 2048), max_tile)
-    while n % n1:
-        n1 //= 2
+    cfg = session.resolve(
+        Workload(op="large_fft", n=n, batch=batch, variant="stockham"),
+        config=config)
+    n1 = fit_block(min(cfg["tile_n"], max_tile), n)
     n2 = n // n1
     sign = 1.0 if inverse else -1.0
     v = x.reshape(batch, n2, n1)
     # kernel 1: length-n2 FFTs down the columns (batch*n1 problems)
     vc = jnp.transpose(v, (0, 2, 1)).reshape(batch * n1, n2)
     if n2 <= max_tile:
-        vc = _kernel_fft(vc, cfg.get("radix", 2),
-                         cfg.get("rows_per_program", 4), inverse, interpret)
+        vc = _kernel_fft(vc, cfg["radix"], cfg["rows_per_program"],
+                         inverse, interpret)
     else:  # recurse (m = 3 kernels, paper: N >= 2^19)
         vc = fft(vc, interpret=interpret, inverse=inverse)
     v = jnp.transpose(vc.reshape(batch, n1, n2), (0, 2, 1))
@@ -70,11 +76,18 @@ def fft(x: jax.Array, config: Optional[dict] = None,
     v = v * jnp.exp(sign * 2j * jnp.pi * (k1 * k2) / n).astype(jnp.complex64)
     # kernel 2: length-n1 FFTs along rows
     vr = v.reshape(batch * n2, n1)
-    vr = _kernel_fft(vr, cfg.get("radix", 2), cfg.get("rows_per_program", 4),
+    vr = _kernel_fft(vr, cfg["radix"], cfg["rows_per_program"],
                      inverse, interpret)
     v = vr.reshape(batch, n2, n1)
     # transpose for self-sorting output
     return jnp.transpose(v, (0, 2, 1)).reshape(batch, n)
+
+
+# the four-step driver resolves op="large_fft" through the same session;
+# register its space under that name too
+tuned_kernel("large_fft", space=large_fft_space, pallas=fft_pallas,
+             reference=fft_ref, normalize=_normalize,
+             variants=("stockham",))(fft)
 
 
 def ifft(x: jax.Array, config: Optional[dict] = None,

@@ -1,37 +1,38 @@
-"""Tuned matmul entry point (TuningDB-driven block shapes)."""
+"""Tuned matmul entry point (TunerSession-driven block shapes)."""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 
-from repro.core import Workload, get_config
+from repro.core.space import Workload, fit_block, matmul_space
 from repro.kernels.matmul.kernel import matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
+from repro.tuning import default_session, plan_execution, tuned_kernel
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _normalize(cfg, wl, dims=None):
+    """Fit block shapes to (M, N, K); wl carries batch=M, n=N and the entry
+    point passes K through ``dims``."""
+    dims = dims or {}
+    m = int(dims.get("m", wl.batch))
+    k = int(dims.get("k", wl.n))
+    return {"block_m": fit_block(cfg.get("block_m", 256), m),
+            "block_n": fit_block(cfg.get("block_n", 256), wl.n),
+            "block_k": fit_block(cfg.get("block_k", 256), k)}
 
 
+@tuned_kernel("matmul", space=matmul_space, pallas=matmul_pallas,
+              reference=matmul_ref, normalize=_normalize, variants=("tiled",))
 def matmul(a: jax.Array, b: jax.Array, config: Optional[dict] = None,
            interpret: Optional[bool] = None,
            use_pallas: Optional[bool] = None) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
-    if use_pallas is None:
-        use_pallas = (not _on_cpu()) or bool(interpret)
+    use_pallas, interpret = plan_execution(use_pallas, interpret)
     if not use_pallas:
         return matmul_ref(a, b)
-    interpret = _on_cpu() if interpret is None else interpret
-    cfg = config or get_config(Workload(op="matmul", n=n, batch=m,
-                                        variant="tiled"))
-    def fit(block, dim):
-        block = min(block, dim)
-        while dim % block:
-            block //= 2
-        return max(block, 1)
-    return matmul_pallas(a, b, block_m=fit(cfg.get("block_m", 256), m),
-                         block_n=fit(cfg.get("block_n", 256), n),
-                         block_k=fit(cfg.get("block_k", 256), k),
-                         interpret=interpret)
+    cfg = default_session().resolve(
+        Workload(op="matmul", n=n, batch=m, variant="tiled"),
+        config=config, dims={"m": m, "k": k})
+    return matmul_pallas(a, b, interpret=interpret, **cfg)

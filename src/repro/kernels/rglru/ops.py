@@ -3,7 +3,9 @@
 The gate computation lives in the model layer; this op runs the recurrence
 h_t = a_t h_{t-1} + sqrt(1-a_t^2) u_t by flattening (B, L, D) into
 (B*D, L) rows for the scan kernel — the direct integration of the paper's
-tuned scan into RecurrentGemma.
+tuned scan into RecurrentGemma. The rglru workload resolves through the
+TunerSession under its own op name (the space is the scan space), so
+per-op DB entries and ``overrides(rglru=...)`` apply.
 """
 from __future__ import annotations
 
@@ -12,9 +14,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.space import Workload, scan_space
+from repro.kernels.scan.kernel import scan_linrec_pallas
+from repro.kernels.scan.ops import _normalize as _normalize_scan
 from repro.kernels.scan.ops import linear_recurrence
+from repro.kernels.scan.ref import scan_linrec_assoc_ref
+from repro.tuning import default_session, plan_execution, tuned_kernel
 
 
+@tuned_kernel("rglru", space=scan_space, pallas=scan_linrec_pallas,
+              reference=scan_linrec_assoc_ref, normalize=_normalize_scan)
 def rglru(a: jax.Array, u: jax.Array, config: Optional[dict] = None,
           interpret: Optional[bool] = None,
           use_pallas: Optional[bool] = None) -> jax.Array:
@@ -22,6 +31,11 @@ def rglru(a: jax.Array, u: jax.Array, config: Optional[dict] = None,
     b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * u
     a_rows = jnp.transpose(a, (0, 2, 1)).reshape(B * D, L)
     b_rows = jnp.transpose(b, (0, 2, 1)).reshape(B * D, L)
-    h = linear_recurrence(a_rows, b_rows, config=config, interpret=interpret,
-                          use_pallas=use_pallas)
+    run_pallas, interpret_eff = plan_execution(use_pallas, interpret)
+    if run_pallas:
+        cfg = default_session().resolve(
+            Workload(op="rglru", n=L, batch=B * D), config=config)
+        h = scan_linrec_pallas(a_rows, b_rows, interpret=interpret_eff, **cfg)
+    else:
+        h = linear_recurrence(a_rows, b_rows, use_pallas=False)
     return jnp.transpose(h.reshape(B, D, L), (0, 2, 1))

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _shift_right(x: jax.Array, off: int, fill: float) -> jax.Array:
     """Shift columns right by `off`, filling with the monoid identity."""
@@ -140,7 +142,7 @@ def scan_add_pallas(x: jax.Array, *, rows_per_program: int = 8,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x)
@@ -165,7 +167,7 @@ def scan_linrec_pallas(a: jax.Array, b: jax.Array, *, rows_per_program: int = 8,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -1,56 +1,55 @@
 """Tuned scan entry points (prefix sum + linear recurrence).
 
-Every call resolves its configuration through the TuningDB (offline-tuned)
-or the analytical model (online, zero evaluations) — the paper's deployment
-flow. Shapes are normalized to (batch, n) rows; callers with higher-rank
-arrays flatten leading dims.
+Every call resolves its configuration through the default
+:class:`repro.tuning.TunerSession` — DB hit (offline-tuned), else the
+memoized analytical model (online, zero evaluations) — the paper's
+deployment flow. Shapes are normalized to (batch, n) rows; callers with
+higher-rank arrays flatten leading dims.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import Workload, get_config
+from repro.core.space import Workload, fit_block, scan_space
 from repro.kernels.scan.kernel import scan_add_pallas, scan_linrec_pallas
 from repro.kernels.scan.ref import scan_add_ref, scan_linrec_assoc_ref
+from repro.tuning import default_session, plan_execution, tuned_kernel
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _normalize(cfg, wl, dims=None):
+    """Fit tuned knobs to the (batch, n) launch geometry; project to the
+    kwargs the scan kernels accept (``in_register`` is a space-only knob)."""
+    return {
+        "rows_per_program": fit_block(cfg.get("rows_per_program", 8),
+                                      max(wl.batch, 1)),
+        "tile_n": fit_block(cfg.get("tile_n", wl.n), wl.n),
+        "radix": cfg.get("radix", 2),
+        "unroll": cfg.get("unroll", 1),
+    }
 
 
-def _norm_cfg(cfg: dict, batch: int, n: int) -> dict:
-    rows = max(min(cfg.get("rows_per_program", 8), batch), 1)
-    while batch % rows:
-        rows //= 2
-    tile = max(min(cfg.get("tile_n", n), n), 1)
-    while n % tile:
-        tile //= 2
-    return {"rows_per_program": max(rows, 1), "tile_n": max(tile, 1),
-            "radix": cfg.get("radix", 2), "unroll": cfg.get("unroll", 1)}
-
-
+@tuned_kernel("scan", space=scan_space, pallas=scan_add_pallas,
+              reference=scan_add_ref, normalize=_normalize,
+              variants=("ks", "lf"))
 def prefix_sum(x: jax.Array, variant: str = "ks",
                config: Optional[dict] = None,
                interpret: Optional[bool] = None,
                use_pallas: Optional[bool] = None) -> jax.Array:
     """Inclusive row-wise prefix sum with tuned blocking."""
     batch, n = x.shape
-    if use_pallas is None:
-        # default: Pallas on TPU, or when the caller explicitly asks for
-        # interpret-mode validation; XLA reference path otherwise (CPU hosts
-        # should not pay the interpret-mode python loop in production paths)
-        use_pallas = (not _on_cpu()) or bool(interpret)
+    use_pallas, interpret = plan_execution(use_pallas, interpret)
     if not use_pallas:
         return scan_add_ref(x)
-    interpret = _on_cpu() if interpret is None else interpret
-    cfg = _norm_cfg(config or get_config(
-        Workload(op="scan", n=n, batch=batch, variant=variant)), batch, n)
+    cfg = default_session().resolve(
+        Workload(op="scan", n=n, batch=batch, variant=variant), config=config)
     return scan_add_pallas(x, interpret=interpret, **cfg)
 
 
+@tuned_kernel("scan", space=scan_space, pallas=scan_linrec_pallas,
+              reference=scan_linrec_assoc_ref, normalize=_normalize,
+              variants=("ks", "lf"))
 def linear_recurrence(a: jax.Array, b: jax.Array, variant: str = "ks",
                       config: Optional[dict] = None,
                       interpret: Optional[bool] = None,
@@ -60,11 +59,9 @@ def linear_recurrence(a: jax.Array, b: jax.Array, variant: str = "ks",
     The workhorse behind RG-LRU layers and SSD inter-chunk state scans.
     """
     batch, n = a.shape
-    if use_pallas is None:
-        use_pallas = (not _on_cpu()) or bool(interpret)
+    use_pallas, interpret = plan_execution(use_pallas, interpret)
     if not use_pallas:
         return scan_linrec_assoc_ref(a, b)
-    interpret = _on_cpu() if interpret is None else interpret
-    cfg = _norm_cfg(config or get_config(
-        Workload(op="scan", n=n, batch=batch, variant=variant)), batch, n)
+    cfg = default_session().resolve(
+        Workload(op="scan", n=n, batch=batch, variant=variant), config=config)
     return scan_linrec_pallas(a, b, interpret=interpret, **cfg)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _intra_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, ac_ref, st_ref):
     x = x_ref[0].astype(jnp.float32)      # (Q, P)
@@ -91,7 +93,7 @@ def ssd_intra_pallas(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
             jax.ShapeDtypeStruct((BH, nc), jnp.float32),
             jax.ShapeDtypeStruct((BH, nc, S, P), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, a, b, c)
@@ -116,7 +118,7 @@ def ssd_apply_entry_pallas(y_intra, a, c, entry, *, chunk: int = 128,
         ],
         out_specs=pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, L, P), y_intra.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(y_intra, a, c, entry)

@@ -1,10 +1,10 @@
 """Tuned SSD op: three-phase chunked state-space dual.
 
 `ssd(x, a, b, c)` with shapes (B, L, H, P), (B, L, H), (B, L, S), (B, L, S).
-The chunk length comes from the TuningDB (op="ssd" shares the scan space;
-tile_n -> chunk). On CPU hosts the pure-jnp chunked formulation runs (same
-math, XLA-fused); the Pallas path is exercised in interpret mode by tests
-and compiled on real TPUs.
+The chunk length comes from the TunerSession (op="ssd" shares the scan
+space; tile_n -> chunk). On CPU hosts the pure-jnp chunked formulation runs
+(same math, XLA-fused); the Pallas path is exercised in interpret mode by
+tests and compiled on real TPUs.
 """
 from __future__ import annotations
 
@@ -13,36 +13,33 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import Workload, get_config
+from repro.core.space import Workload, fit_block, scan_space
 from repro.kernels.scan.ref import scan_linrec_assoc_ref
 from repro.kernels.ssd.kernel import ssd_apply_entry_pallas, ssd_intra_pallas
 from repro.kernels.ssd.ref import ssd_chunked_ref
+from repro.tuning import default_session, plan_execution, tuned_kernel
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _normalize(cfg, wl, dims=None):
+    """The only launch knob is the chunk length (tuned tile_n fit to L)."""
+    return {"chunk": fit_block(cfg.get("tile_n", 128), wl.n)}
 
 
-def _pick_chunk(L: int, cfg: dict) -> int:
-    chunk = min(cfg.get("tile_n", 128), L)
-    while L % chunk:
-        chunk //= 2
-    return max(chunk, 1)
-
-
+@tuned_kernel("ssd", space=scan_space, pallas=ssd_intra_pallas,
+              reference=ssd_chunked_ref, normalize=_normalize,
+              variants=("chunked",))
 def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
         config: Optional[dict] = None, interpret: Optional[bool] = None,
         use_pallas: Optional[bool] = None) -> jax.Array:
     B, L, H, P = x.shape
     S = b.shape[-1]
-    cfg = config or get_config(Workload(op="ssd", n=L, batch=B * H,
-                                        variant="chunked"))
-    chunk = _pick_chunk(L, cfg)
-    if use_pallas is None:
-        use_pallas = (not _on_cpu()) or bool(interpret)
+    cfg = default_session().resolve(
+        Workload(op="ssd", n=L, batch=B * H, variant="chunked"),
+        config=config)
+    chunk = cfg["chunk"]
+    use_pallas, interpret = plan_execution(use_pallas, interpret)
     if not use_pallas:
         return ssd_chunked_ref(x, a, b, c, chunk=chunk)
-    interpret = _on_cpu() if interpret is None else interpret
 
     # reshape to (BH, L, ...) rows; broadcast b/c over heads (n_groups=1)
     xbh = jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, L, P)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _shift(x: jax.Array, off: int, fill: float) -> jax.Array:
     """off > 0: shift right (neighbour i-off); off < 0: shift left."""
@@ -77,7 +79,7 @@ def pcr_pallas(a: jax.Array, b: jax.Array, c: jax.Array, d: jax.Array, *,
         in_specs=[spec] * 4,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(a, b, c, d)

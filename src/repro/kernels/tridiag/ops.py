@@ -11,8 +11,8 @@ The four parallel variants mirror the BPLG solver family (paper §III):
         wise (sequential inside a chunk of `radix * 16` elements, parallel
         across chunks) — the radix is the tunable fan-in, as in the paper.
 
-`solve(..., variant=...)` consumes the TuningDB configuration for the
-(op="tridiag", variant, n, batch) workload.
+`solve(..., variant=...)` resolves the configuration for the
+(op="tridiag", variant, n, batch) workload through the TunerSession.
 """
 from __future__ import annotations
 
@@ -22,13 +22,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import Workload, get_config
+from repro.core.space import Workload, fit_block, tridiag_space
 from repro.kernels.tridiag.kernel import pcr_pallas
 from repro.kernels.tridiag.ref import thomas_ref
+from repro.tuning import default_session, on_cpu, tuned_kernel
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _normalize(cfg, wl, dims=None):
+    """Fit the PCR grid rows to the batch; radix/unroll pass through (the
+    WM chunk is derived from the radix at dispatch time)."""
+    return {"rows_per_program": fit_block(cfg.get("rows_per_program", 8),
+                                          max(wl.batch, 1)),
+            "radix": cfg.get("radix", 2),
+            "unroll": cfg.get("unroll", 1)}
 
 
 # ---------------------------------------------------------------------------
@@ -188,29 +194,31 @@ def wm_solve(a, b, c, d, chunk: int = 32):
 # dispatch
 # ---------------------------------------------------------------------------
 
+@tuned_kernel("tridiag", space=tridiag_space, pallas=pcr_pallas,
+              reference=thomas_ref, normalize=_normalize,
+              variants=("pcr", "cr", "lf", "wm", "thomas"))
 def solve(a, b, c, d, variant: str = "pcr", config: Optional[dict] = None,
           interpret: Optional[bool] = None):
     """Tuned batched tridiagonal solve; x with A x = d."""
     batch, n = a.shape
-    if config is None:
-        config = get_config(Workload(op="tridiag", n=n, batch=batch,
-                                     variant=variant))
+
+    def cfg():
+        return default_session().resolve(
+            Workload(op="tridiag", n=n, batch=batch, variant=variant),
+            config=config)
+
     if variant == "pcr":
-        interpret = _on_cpu() if interpret is None else interpret
-        rows = min(config.get("rows_per_program", 8), batch)
-        while batch % rows:
-            rows //= 2
-        return pcr_pallas(a, b, c, d, rows_per_program=max(rows, 1),
-                          unroll=config.get("unroll", 1), interpret=interpret)
+        interpret = on_cpu() if interpret is None else interpret
+        c_ = cfg()
+        return pcr_pallas(a, b, c, d, rows_per_program=c_["rows_per_program"],
+                          unroll=c_["unroll"], interpret=interpret)
     if variant == "cr":
         return cr_solve(a, b, c, d)
     if variant == "lf":
         return lf_solve(a, b, c, d)
     if variant == "wm":
-        chunk = min(max(config.get("radix", 2) * 16, 8), max(n // 2, 1))
-        while n % chunk:
-            chunk //= 2
-        return wm_solve(a, b, c, d, chunk=max(chunk, 1))
+        chunk = fit_block(min(max(cfg()["radix"] * 16, 8), max(n // 2, 1)), n)
+        return wm_solve(a, b, c, d, chunk=chunk)
     if variant == "thomas":
         return thomas_ref(a, b, c, d)
     raise ValueError(f"unknown tridiag variant {variant!r}")

@@ -3,22 +3,29 @@
   PYTHONPATH=src python -m repro.launch.tune --op scan --variant lf \
       --sizes 128,256,512 --method bayesian
   PYTHONPATH=src python -m repro.launch.tune --paper-suite   # all paper ops
+
+Runs through a :class:`repro.tuning.TunerSession`; ``--db`` selects a
+non-default store.
 """
 from __future__ import annotations
 
 import argparse
+from typing import Optional
 
 from repro.configs.paper_ops import PREFIX_OPS, TOTAL_ELEMS
-from repro.core import TPUCostModelObjective, Workload, tune_offline
+from repro.core import TPUCostModelObjective, Workload
+from repro.tuning import TunerSession, default_session, strategies
 
 
-def tune_suite(method: str, noise: float = 0.02, verbose: bool = True) -> None:
+def tune_suite(method: str, noise: float = 0.02, verbose: bool = True,
+               session: Optional[TunerSession] = None) -> None:
+    session = session or default_session()
     for op, spec in PREFIX_OPS.items():
         for variant in spec["variants"]:
             for n in spec["sizes"]:
                 wl = Workload(op=op, n=n, batch=max(TOTAL_ELEMS // n, 1),
                               variant=variant)
-                res = tune_offline(wl, method=method,
+                res = session.tune(wl, method=method,
                                    objective=TPUCostModelObjective(noise=noise))
                 if verbose:
                     print(f"[tune] {wl.key}: {res.best_config} "
@@ -32,20 +39,22 @@ def main() -> None:
     ap.add_argument("--variant", default="")
     ap.add_argument("--sizes", default="")
     ap.add_argument("--batch", type=int, default=0)
-    ap.add_argument("--method", default="bayesian",
-                    choices=["bayesian", "analytical", "exhaustive", "random"])
+    ap.add_argument("--method", default="bayesian", choices=list(strategies()))
+    ap.add_argument("--db", default=None,
+                    help="path to the tuning DB (default: the session DB)")
     ap.add_argument("--paper-suite", action="store_true")
     args = ap.parse_args()
 
+    session = TunerSession(db_path=args.db) if args.db else default_session()
     if args.paper_suite:
-        tune_suite(args.method)
+        tune_suite(args.method, session=session)
         return
     assert args.op and args.sizes
     for n in [int(s) for s in args.sizes.split(",")]:
         wl = Workload(op=args.op, n=n,
                       batch=args.batch or max(TOTAL_ELEMS // n, 1),
                       variant=args.variant)
-        res = tune_offline(wl, method=args.method)
+        res = session.tune(wl, method=args.method)
         print(f"[tune] {wl.key}: {res.best_config} "
               f"t={res.best_time*1e6:.1f}us evals={res.evaluations}")
 

@@ -4,6 +4,7 @@ injectable failures for tests)."""
 from __future__ import annotations
 
 import dataclasses
+import sys
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
@@ -56,33 +57,45 @@ def run_training(model: Model, hp: TrainHParams, loop: LoopConfig,
     watchdog = HeartbeatWatchdog()
     history = []
     t_prev = time.perf_counter()
-    for step in range(start_step, loop.total_steps):
-        batch = next(data)
-        if device_put is not None:
-            batch = device_put(batch)
-        if injector is not None:
-            injector.maybe_fail(step)
-        state, metrics = step_fn(state, batch)
-        # block on the loss to get a truthful step time
-        loss = float(metrics["loss"])
-        now = time.perf_counter()
-        dt = now - t_prev
-        t_prev = now
-        watchdog.beat()
-        if straggler.observe(step, dt):
-            log(f"[loop] straggler at step {step}: {dt:.3f}s "
-                f"(ema {straggler.ema:.3f}s)")
-        if step % loop.log_every == 0 or step == loop.total_steps - 1:
-            rec = {"step": step, "loss": loss,
-                   "accuracy": float(metrics["accuracy"]),
-                   "grad_norm": float(metrics["grad_norm"]),
-                   "step_time_s": dt}
-            history.append(rec)
-            log(f"[loop] step {step}: loss={loss:.4f} "
-                f"acc={rec['accuracy']:.3f} gnorm={rec['grad_norm']:.2f} "
-                f"dt={dt:.2f}s")
-        if ckpt is not None and (step + 1) % loop.checkpoint_every == 0:
-            ckpt.save(step + 1, state)
+    try:
+        for step in range(start_step, loop.total_steps):
+            batch = next(data)
+            if device_put is not None:
+                batch = device_put(batch)
+            if injector is not None:
+                injector.maybe_fail(step)
+            state, metrics = step_fn(state, batch)
+            # block on the loss to get a truthful step time
+            loss = float(metrics["loss"])
+            now = time.perf_counter()
+            dt = now - t_prev
+            t_prev = now
+            watchdog.beat()
+            if straggler.observe(step, dt):
+                log(f"[loop] straggler at step {step}: {dt:.3f}s "
+                    f"(ema {straggler.ema:.3f}s)")
+            if step % loop.log_every == 0 or step == loop.total_steps - 1:
+                rec = {"step": step, "loss": loss,
+                       "accuracy": float(metrics["accuracy"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "step_time_s": dt}
+                history.append(rec)
+                log(f"[loop] step {step}: loss={loss:.4f} "
+                    f"acc={rec['accuracy']:.3f} gnorm={rec['grad_norm']:.2f} "
+                    f"dt={dt:.2f}s")
+            if ckpt is not None and (step + 1) % loop.checkpoint_every == 0:
+                ckpt.save(step + 1, state)
+    finally:
+        # a crash (e.g. injected node failure) must not lose an in-flight
+        # async checkpoint write: the restart resumes from it
+        if ckpt is not None:
+            try:
+                ckpt.wait()
+            except RuntimeError:
+                # only suppress while another exception is propagating —
+                # a write failure on the normal path must surface
+                if sys.exc_info()[0] is None:
+                    raise
     if ckpt is not None:
         ckpt.save(loop.total_steps, state)
         ckpt.wait()

@@ -1,0 +1,60 @@
+"""repro.tuning — the public API for every tuned kernel.
+
+Offline -> online lifecycle (see docs/tuning.md):
+
+    session = TunerSession(db_path="artifacts/tuning_db.json")
+    session.tune(wl, method="bayesian")       # offline: populate the DB
+    cfg = session.resolve(wl)                 # online: cached, normalized
+
+    with overrides(scan={"radix": 4}):        # scoped experiments
+        prefix_sum(x)
+
+Kernel families declare themselves once via ``@tuned_kernel`` (space
+builder, pallas impl, reference impl, config normalizer); the session is
+the only component that turns a Workload into launch kwargs.
+
+Module-level ``resolve``/``tune``/``suggest`` delegate to the process-wide
+default session.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+from repro.core.bayesian import TuneResult
+from repro.core.space import (Config, Workload, build_space, fit_block,
+                              normalize_config)
+from repro.tuning.db import DEFAULT_DB_PATH, SCHEMA_VERSION, TuningDB
+from repro.tuning.dispatch import on_cpu, plan_execution
+from repro.tuning.overrides import active_overrides, overrides, overrides_active
+from repro.tuning.registry import (KernelSpec, get_kernel, normalizer_for,
+                                   registered_kernels, tuned_kernel)
+from repro.tuning.session import (TunerSession, default_session, get_strategy,
+                                  register_strategy, set_default_session,
+                                  strategies)
+
+
+def resolve(wl: Workload, *, config: Optional[Mapping[str, int]] = None,
+            dims: Optional[Mapping[str, int]] = None) -> Config:
+    """Resolve a launch-ready config through the default session."""
+    return default_session().resolve(wl, config=config, dims=dims)
+
+
+def tune(wl: Workload, method: str = "bayesian", **kw) -> TuneResult:
+    """Offline-tune through the default session (persists the winner)."""
+    return default_session().tune(wl, method=method, **kw)
+
+
+def suggest(wl: Workload) -> Config:
+    """Zero-evaluation analytical suggestion via the default session."""
+    return default_session().suggest(wl)
+
+
+__all__ = [
+    "Config", "DEFAULT_DB_PATH", "KernelSpec", "SCHEMA_VERSION", "TuneResult",
+    "TunerSession", "TuningDB", "Workload", "active_overrides", "build_space",
+    "default_session", "fit_block", "get_kernel", "get_strategy",
+    "normalize_config",
+    "normalizer_for", "on_cpu", "overrides", "overrides_active",
+    "plan_execution", "register_strategy", "registered_kernels", "resolve",
+    "set_default_session", "strategies", "suggest", "tune", "tuned_kernel",
+]

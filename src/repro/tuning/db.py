@@ -1,0 +1,96 @@
+"""Versioned, thread-safe JSON config store (the offline -> online handoff).
+
+Schema 2 wraps the entries in an envelope so future migrations are cheap:
+
+    {"schema": 2,
+     "entries": {"<platform>|<workload-key>": {"config": {...},
+                                               "time_s": ..., "method": ...,
+                                               "evaluations": ...}}}
+
+Legacy (schema-1) files were a flat ``{key: entry}`` mapping; ``_load``
+migrates them transparently and the next ``store`` persists the new
+envelope. Writes are atomic (tmp file + ``os.replace``) and serialized by a
+lock, so concurrent ``store`` calls from threads never corrupt the file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional
+
+SCHEMA_VERSION = 2
+
+DEFAULT_DB_PATH = os.environ.get(
+    "REPRO_TUNING_DB", os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                    "artifacts", "tuning_db.json"))
+
+
+class TuningDB:
+    """JSON-backed config store; thread-safe; content-addressed by workload key."""
+
+    def __init__(self, path: Optional[str] = None, platform: str = "tpu_v5e"):
+        self.path = os.path.abspath(path or DEFAULT_DB_PATH)
+        self.platform = platform
+        self._lock = threading.Lock()
+        self._data: Dict[str, Dict] = {}
+        self._loaded = False
+
+    # -- persistence ---------------------------------------------------------
+
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        if os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                raw = {}
+            if isinstance(raw, dict) and "schema" in raw:
+                self._data = dict(raw.get("entries") or {})
+            else:
+                # legacy flat {key: entry} file (schema 1)
+                self._data = raw if isinstance(raw, dict) else {}
+        self._loaded = True
+
+    def _flush_locked(self) -> None:
+        directory = os.path.dirname(self.path)
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+        payload = {"schema": SCHEMA_VERSION, "entries": self._data}
+        tmp = f"{self.path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # -- access --------------------------------------------------------------
+
+    def _key(self, wl) -> str:
+        return f"{self.platform}|{wl.key}"
+
+    def lookup(self, wl) -> Optional[Dict]:
+        with self._lock:
+            self._load()
+            entry = self._data.get(self._key(wl))
+            return dict(entry["config"]) if entry else None
+
+    def store(self, wl, cfg: Dict, time_s: float, method: str,
+              evaluations: int = 0) -> None:
+        with self._lock:
+            self._load()
+            self._data[self._key(wl)] = {
+                "config": dict(cfg), "time_s": time_s, "method": method,
+                "evaluations": evaluations,
+            }
+            self._flush_locked()
+
+    def entries(self) -> Dict[str, Dict]:
+        with self._lock:
+            self._load()
+            return dict(self._data)
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load()
+            return len(self._data)

@@ -1,0 +1,38 @@
+"""Shared backend planning for tuned kernel entry points.
+
+Every kernels/*/ops.py used to carry a private ``_on_cpu()`` plus the same
+three-line default dance for ``use_pallas``/``interpret``. The one copy
+lives here.
+
+Policy (unchanged from the historical per-file copies):
+  * default: Pallas on accelerators; on CPU hosts the XLA reference path
+    runs unless the caller explicitly asks for interpret-mode validation
+    (production CPU paths should not pay the interpret-mode python loop);
+  * explicit ``use_pallas=`` always wins;
+  * when the Pallas path runs and ``interpret`` was not forced, interpret
+    mode is enabled exactly on CPU hosts.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def plan_execution(use_pallas: Optional[bool], interpret: Optional[bool],
+                   gate: bool = True) -> Tuple[bool, bool]:
+    """Resolve (use_pallas, interpret) defaults for a kernel launch.
+
+    ``gate`` lets an op veto the Pallas default for shapes where tiling has
+    nothing to add (e.g. decode-shaped attention) without affecting an
+    explicit ``use_pallas=True``.
+    """
+    if use_pallas is None:
+        use_pallas = ((not on_cpu()) or bool(interpret)) and gate
+    if not use_pallas:
+        return False, False
+    return True, on_cpu() if interpret is None else interpret

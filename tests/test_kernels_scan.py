@@ -1,10 +1,12 @@
 """Pallas scan kernels vs pure-jnp oracle: shape/dtype/radix sweeps +
 hypothesis properties."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kernels.scan.kernel import scan_add_pallas, scan_linrec_pallas

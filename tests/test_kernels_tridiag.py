@@ -1,9 +1,11 @@
 """Tridiagonal solvers (PCR Pallas + CR/LF/WM) vs Thomas/dense oracles."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kernels.tridiag import ops

@@ -1,6 +1,8 @@
 """Phi performance-portability metric properties (paper §VI)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.metrics import efficiency, phi, phi_from_times

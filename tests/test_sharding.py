@@ -9,7 +9,10 @@ from repro.distributed.sharding import (ShardingDecisions, param_specs,
                                         spec_for_leaf)
 from repro.models.model import build_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+try:  # newer jax: AbstractMesh(axis_sizes, axis_names)
+    MESH = AbstractMesh((16, 16), ("data", "model"))
+except TypeError:  # older jax: AbstractMesh(((name, size), ...))
+    MESH = AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_attention_weights_2d_sharded():

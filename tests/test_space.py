@@ -1,6 +1,8 @@
 """Search-space construction, validity, and encoding."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import Workload, build_space

@@ -1,0 +1,297 @@
+"""The repro.tuning public API: sessions, overrides, shims, DB schema."""
+import json
+import os
+import threading
+import warnings
+
+import pytest
+
+from repro.core import TuningDB, Workload, build_space, get_config, tune_offline
+from repro.tuning import (TunerSession, default_session, overrides,
+                          registered_kernels, set_default_session)
+from repro.tuning.db import SCHEMA_VERSION
+
+
+def _wl(n=256, batch=4096, op="scan", variant="ks"):
+    return Workload(op=op, n=n, batch=batch, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# TunerSession core behaviours
+# ---------------------------------------------------------------------------
+
+def test_session_roundtrip_fresh_session_lookup(tmp_path):
+    """tune -> persist -> a brand-new session sees the stored winner."""
+    path = str(tmp_path / "db.json")
+    s1 = TunerSession(db_path=path)
+    wl = _wl()
+    res = s1.tune(wl, method="random", max_evals=8)
+    assert s1.lookup(wl) == res.best_config
+    s2 = TunerSession(db_path=path)          # fresh session, same store
+    assert s2.lookup(wl) == res.best_config
+    assert s2.resolve_raw(wl) == res.best_config
+
+
+def test_resolve_is_cached_and_normalized(tmp_path):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl()
+    c1 = s.resolve(wl)
+    c2 = s.resolve(wl)
+    assert c1 == c2
+    assert s.hits >= 1 and s.misses == 1
+    # normalized launch kwargs: knobs divide the workload dims
+    assert wl.batch % c1["rows_per_program"] == 0
+    assert wl.n % c1["tile_n"] == 0
+    # returned dicts are caller-owned copies — mutation cannot poison cache
+    c1["tile_n"] = -1
+    assert s.resolve(wl)["tile_n"] != -1
+
+
+def test_analytical_suggestions_memoized(tmp_path, monkeypatch):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    calls = {"n": 0}
+    real = s._analytical.suggest
+
+    def counting(space):
+        calls["n"] += 1
+        return real(space)
+
+    monkeypatch.setattr(s._analytical, "suggest", counting)
+    wl = _wl()
+    s.resolve(wl)
+    s._resolved.clear()                        # drop resolve LRU only
+    s.resolve(wl)
+    s.suggest(wl)
+    assert calls["n"] == 1                     # one model run per workload key
+
+
+def test_tune_invalidates_resolve_cache(tmp_path):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl()
+    cold = s.resolve(wl)
+    res = s.tune(wl, method="random", max_evals=8)
+    warm = s.resolve(wl)
+    # post-tune resolution must reflect the DB entry, not the stale cache
+    from repro.tuning import normalizer_for
+    assert warm == normalizer_for(wl.op)(res.best_config, wl.canonical(), None)
+    assert cold is not warm
+
+
+def test_workload_canonicalization():
+    import jax.numpy as jnp
+
+    a = Workload(op="scan", n=256, batch=512, dtype="float32", variant="ks")
+    b = Workload(op="scan", n=256, batch=512, dtype=jnp.float32, variant="ks")
+    assert b.canonical().key == a.key
+
+
+# ---------------------------------------------------------------------------
+# overrides()
+# ---------------------------------------------------------------------------
+
+def test_overrides_nesting_and_restoration(tmp_path):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl()
+    base = s.resolve(wl)
+    with overrides(scan={"radix": 4}):
+        outer = s.resolve(wl)
+        assert outer["radix"] == 4
+        with overrides(scan={"radix": 8, "unroll": 2}):
+            inner = s.resolve(wl)
+            assert inner["radix"] == 8 and inner["unroll"] == 2
+        mid = s.resolve(wl)                  # inner frame popped
+        assert mid["radix"] == 4 and mid["unroll"] == base["unroll"]
+    assert s.resolve(wl) == base             # fully restored
+
+
+def test_overrides_restore_on_exception(tmp_path):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl()
+    base = s.resolve(wl)
+    with pytest.raises(RuntimeError):
+        with overrides(scan={"radix": 8}):
+            raise RuntimeError("boom")
+    assert s.resolve(wl) == base
+
+
+def test_overrides_are_thread_local(tmp_path):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl()
+    base = s.resolve(wl)
+    seen = {}
+
+    def worker():
+        seen["other"] = s.resolve(wl)
+
+    with overrides(scan={"radix": 8}):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen["other"] == base             # other thread unaffected
+
+
+def test_overrides_reject_non_mapping():
+    with pytest.raises(TypeError):
+        with overrides(scan=4):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_shims_warn_and_match_session(tmp_path):
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    wl = _wl(n=512, batch=2048, variant="lf")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = get_config(wl, db=db)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    # identical to what a session bound to the same DB resolves (raw)
+    assert cfg == TunerSession(db=db).resolve_raw(wl)
+    assert build_space(wl).is_valid(cfg)
+
+
+def test_tune_offline_shim_populates_db_and_warns(tmp_path):
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    wl = _wl(n=256, batch=2048, variant="lf")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        res = tune_offline(wl, method="random", db=db, max_evals=8)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert db.lookup(wl) == res.best_config
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("ignore")
+        assert get_config(wl, db=db) == res.best_config
+
+
+def test_global_db_warns_and_is_default_sessions_db():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        from repro.core import global_db
+        db = global_db()
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert db is default_session().db
+
+
+# ---------------------------------------------------------------------------
+# TuningDB: schema, paths, concurrency
+# ---------------------------------------------------------------------------
+
+def test_db_schema_versioned_envelope(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path=path)
+    db.store(_wl(), {"tile_n": 128}, 1e-4, "random", 3)
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["schema"] == SCHEMA_VERSION
+    assert len(raw["entries"]) == 1
+
+
+def test_db_migrates_legacy_flat_file(tmp_path):
+    path = str(tmp_path / "db.json")
+    wl = _wl()
+    legacy_key = f"tpu_v5e|{wl.key}"
+    with open(path, "w") as f:
+        json.dump({legacy_key: {"config": {"tile_n": 64}, "time_s": 1e-4,
+                                "method": "bayesian", "evaluations": 5}}, f)
+    db = TuningDB(path=path)
+    assert db.lookup(wl) == {"tile_n": 64}
+    # first store upgrades the file to the enveloped schema
+    db.store(_wl(n=512), {"tile_n": 128}, 2e-4, "random", 1)
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["schema"] == SCHEMA_VERSION
+    assert legacy_key in raw["entries"]
+
+
+def test_db_store_with_bare_filename_path(tmp_path, monkeypatch):
+    """A path with no directory component must not crash (os.makedirs(''))."""
+    monkeypatch.chdir(tmp_path)
+    db = TuningDB(path="bare_db.json")
+    db.store(_wl(), {"tile_n": 128}, 1e-4, "random", 1)
+    assert os.path.exists(tmp_path / "bare_db.json")
+    assert TuningDB(path="bare_db.json").lookup(_wl()) == {"tile_n": 128}
+
+
+def test_db_concurrent_store_from_threads(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path=path)
+    n_threads, per_thread = 8, 10
+    errors = []
+
+    def worker(tid):
+        try:
+            for i in range(per_thread):
+                wl = _wl(n=128 * (1 + i % 4), batch=2 ** (8 + tid % 3))
+                db.store(wl, {"tile_n": 128, "tid": tid}, 1e-4, "random", i)
+        except Exception as e:              # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # file is valid, enveloped JSON with every distinct key present
+    fresh = TuningDB(path=path)
+    assert len(fresh.entries()) == len({
+        f"tpu_v5e|{_wl(n=128 * (1 + i % 4), batch=2 ** (8 + t % 3)).key}"
+        for t in range(n_threads) for i in range(per_thread)})
+
+
+# ---------------------------------------------------------------------------
+# registry + hot-path speedup
+# ---------------------------------------------------------------------------
+
+def test_all_seven_kernel_families_registered():
+    # importing the ops modules registers the specs
+    import repro.kernels.attention.ops    # noqa: F401
+    import repro.kernels.fft.ops          # noqa: F401
+    import repro.kernels.matmul.ops       # noqa: F401
+    import repro.kernels.rglru.ops        # noqa: F401
+    import repro.kernels.scan.ops         # noqa: F401
+    import repro.kernels.ssd.ops          # noqa: F401
+    import repro.kernels.tridiag.ops      # noqa: F401
+
+    specs = registered_kernels()
+    ops = {spec.op for spec in specs.values()}
+    assert {"scan", "tridiag", "fft", "large_fft", "ssd", "rglru",
+            "attention", "matmul"} <= ops
+    for spec in specs.values():
+        assert callable(spec.normalize)
+        assert spec.reference is not None
+
+
+def test_warm_resolve_much_faster_than_miss_path(tmp_path):
+    """Acceptance: repeated resolve() >= 10x faster than the uncached miss
+    path (analytical model + space enumeration per call)."""
+    import time
+
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl(n=512, batch=2 ** 15)
+    s.resolve(wl)                            # prime
+
+    t0 = time.perf_counter()
+    for _ in range(50):
+        s.resolve(wl)
+    warm = (time.perf_counter() - t0) / 50
+
+    from repro.core.analytical import AnalyticalTuner
+    t0 = time.perf_counter()
+    for _ in range(3):
+        AnalyticalTuner().suggest(build_space(wl))   # the old miss path
+    miss = (time.perf_counter() - t0) / 3
+
+    assert miss / max(warm, 1e-9) >= 10, (warm, miss)
+
+
+def test_set_default_session_swaps(tmp_path):
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    prev = set_default_session(s)
+    try:
+        assert default_session() is s
+    finally:
+        set_default_session(prev)
