@@ -1,0 +1,124 @@
+"""Micro-benchmark: the learned predictor's online path.
+
+Compares, per holdout workload, the two zero-evaluation online answers:
+  * analytical suggest — enumerate + score the space with the expert model;
+  * ml predict — featurize the candidates and rank them with the trained
+    forest (the strategy="ml" hot path), plus its accuracy vs exhaustive.
+
+By default a small bundle is trained in-process on the training suite
+(``--smoke`` shrinks ops/trees so CI finishes in seconds); pass ``--model``
+to benchmark a saved artifact instead.
+
+Emits CSV rows (ml_predict,<op>:<variant>,<N>,<metric>,<value>) and, with
+``--json``, a BENCH_ML_PREDICT.json artifact for the CI perf trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_ml_predict.py --smoke --seed 0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+from repro.core import build_space
+from repro.core.analytical import AnalyticalTuner
+from repro.tuning.ml import (ModelBundle, build_dataset, evaluate_model,
+                             featurize_batch, suite_workloads, train_bundle)
+from repro.tuning.ml.dataset import POOLED_OPS
+
+SMOKE_OPS = ["scan", "fft", "attention"]
+
+
+def timeit(fn, reps: int) -> float:
+    fn()                                     # warm caches / allocators
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _bundle(ops: Optional[List[str]], seed: int, trees: int,
+            depth: int) -> ModelBundle:
+    ds = build_dataset(suite_workloads("train", ops=ops))
+    return train_bundle(ds.by_op(), n_trees=trees, max_depth=depth,
+                        seed=seed, meta={"aliases": POOLED_OPS})
+
+
+def run(emit, *, seed: int = 0, smoke: bool = False,
+        model_path: Optional[str] = None) -> dict:
+    ops = SMOKE_OPS if smoke else None
+    reps = 3 if smoke else 10
+    t0 = time.perf_counter()
+    if model_path:
+        bundle = ModelBundle.load(model_path)
+        emit(f"ml_predict,_,_,artifact,{model_path}")
+    else:
+        bundle = _bundle(ops, seed, trees=12 if smoke else 48,
+                         depth=10 if smoke else 12)
+    train_s = time.perf_counter() - t0
+    emit(f"ml_predict,_,_,train_s,{train_s:.2f}")
+
+    ana = AnalyticalTuner()
+    holdout = suite_workloads("holdout", ops=ops)
+    summary = {"train_s": train_s, "seed": seed, "workloads": []}
+    for wl in holdout:
+        wl = wl.canonical()
+        space = build_space(wl)
+        cfgs = space.enumerate_valid()
+        X = featurize_batch(space, cfgs)
+        forest = bundle.forest_for(wl.op)
+        if forest is None:
+            continue
+        tag = f"{wl.op}:{wl.variant or 'default'},{wl.n}"
+        t_feat = timeit(lambda: featurize_batch(space, cfgs), reps)
+        t_rank = timeit(lambda: forest.predict(X), reps)
+        t_ana = timeit(lambda: ana.suggest(space), reps)
+        emit(f"ml_predict,{tag},candidates,{len(cfgs)}")
+        emit(f"ml_predict,{tag},featurize_us,{t_feat*1e6:.0f}")
+        emit(f"ml_predict,{tag},rank_us,{t_rank*1e6:.0f}")
+        emit(f"ml_predict,{tag},analytical_us,{t_ana*1e6:.0f}")
+        summary["workloads"].append(
+            {"workload": wl.key, "candidates": len(cfgs),
+             "featurize_us": t_feat * 1e6, "rank_us": t_rank * 1e6,
+             "analytical_us": t_ana * 1e6})
+
+    report = evaluate_model(bundle, holdout)
+    if report["n_scored"]:
+        emit(f"ml_predict,_,_,top1_rate,{report['top1_rate']:.3f}")
+        emit(f"ml_predict,_,_,mean_slowdown,{report['mean_slowdown']:.4f}")
+        emit(f"ml_predict,_,_,max_slowdown,{report['max_slowdown']:.4f}")
+        summary["top1_rate"] = report["top1_rate"]
+        summary["mean_slowdown"] = report["mean_slowdown"]
+        summary["max_slowdown"] = report["max_slowdown"]
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced ops/trees/reps for CI")
+    ap.add_argument("--model", default=None,
+                    help="benchmark a saved artifact instead of training")
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_ML_PREDICT.json summary")
+    args = ap.parse_args()
+    rows: List[str] = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    summary = run(emit, seed=args.seed, smoke=args.smoke,
+                  model_path=args.model)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "ml_predict", "seed": args.seed,
+                       "smoke": bool(args.smoke), "rows": rows,
+                       "summary": summary}, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,12 +7,15 @@ Compares, for a warm workload:
   * session resolve (warm) — the new hot path: LRU hit + copy.
 
 Emits CSV rows (name,metric,value) and asserts the acceptance criterion
-(warm resolve >= 10x faster than the miss path).
+(warm resolve >= 10x faster than the miss path). ``--json`` writes a
+BENCH_RESOLVE.json artifact for the CI perf trajectory.
 
-    PYTHONPATH=src python benchmarks/bench_resolve.py
+    PYTHONPATH=src python benchmarks/bench_resolve.py --json BENCH_RESOLVE.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import tempfile
 import time
 
@@ -57,7 +60,36 @@ def run(emit) -> float:
     return worst
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_RESOLVE.json summary")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="accepted for CLI uniformity; this bench is "
+                         "deterministic apart from timer noise")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="record the speedup without gating on it (for "
+                         "noisy shared CI runners; the pytest suite still "
+                         "enforces the 10x criterion)")
+    args = ap.parse_args()
+    rows = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    worst = run(emit)
+    if not args.no_assert:
+        assert worst >= 10, \
+            f"warm resolve only {worst:.1f}x faster than miss path"
+        print(f"# acceptance ok: worst-case speedup {worst:.0f}x (>= 10x)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "resolve", "seed": args.seed, "rows": rows,
+                       "summary": {"worst_speedup": worst}},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
 if __name__ == "__main__":
-    worst = run(print)
-    assert worst >= 10, f"warm resolve only {worst:.1f}x faster than miss path"
-    print(f"# acceptance ok: worst-case speedup {worst:.0f}x (>= 10x)")
+    main()

@@ -6,11 +6,18 @@ Prints ``name,...`` CSV rows:
   table2              — average performance + Phi per (op, methodology);
   fig4 / fig4d        — BO candidate-evaluation counts (+ control vs random);
   roofline            — per (arch x shape) three-term roofline summary;
-  resolve             — TunerSession online hot-path vs seed miss path.
+  resolve             — TunerSession online hot-path vs seed miss path;
+  ml_predict          — learned-predictor rank latency + holdout accuracy.
+
+``--seed`` flows into every stochastic section so CI runs are
+reproducible; ``--json-dir`` writes one BENCH_<SECTION>.json per section
+(the artifact the CI bench-smoke job uploads).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -18,28 +25,58 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: prefix_ops,convergence,roofline,resolve")
+                    help="comma list: prefix_ops,convergence,roofline,"
+                         "resolve,ml_predict")
     ap.add_argument("--no-host-wallclock", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the stochastic sections (reproducible CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads/reps where supported")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<SECTION>.json files here")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    section_rows = {}
+    current = [None]
+
     def emit(row: str) -> None:
+        if current[0] is not None:
+            section_rows.setdefault(current[0], []).append(row)
         print(row, flush=True)
+
+    def begin(name: str) -> bool:
+        active = only is None or name in only
+        current[0] = name if active else None
+        return active
 
     t0 = time.time()
     emit("table,op,variant,N,method,metric,value,extra")
-    if only is None or "prefix_ops" in only:
+    if begin("prefix_ops"):
         from benchmarks.bench_prefix_ops import run as run_ops
         run_ops(emit, host_wallclock=not args.no_host_wallclock)
-    if only is None or "convergence" in only:
+    if begin("convergence"):
         from benchmarks.bench_convergence import run as run_conv
         run_conv(emit)
-    if only is None or "roofline" in only:
+    if begin("roofline"):
         from benchmarks.bench_roofline import run as run_roof
         run_roof(emit)
-    if only is None or "resolve" in only:
+    if begin("resolve"):
         from benchmarks.bench_resolve import run as run_resolve
         run_resolve(emit)
+    if begin("ml_predict"):
+        from benchmarks.bench_ml_predict import run as run_ml
+        run_ml(emit, seed=args.seed, smoke=args.smoke)
+
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
+        for name, rows in section_rows.items():
+            path = os.path.join(args.json_dir, f"BENCH_{name.upper()}.json")
+            with open(path, "w") as f:
+                json.dump({"bench": name, "seed": args.seed,
+                           "smoke": bool(args.smoke), "rows": rows},
+                          f, indent=1, sort_keys=True)
+            print(f"# wrote {path}", file=sys.stderr)
     print(f"# benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 

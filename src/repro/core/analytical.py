@@ -21,7 +21,8 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.space import Config, SearchSpace, Workload
-from repro.hw.tpu import V5E, dtype_bytes, lane_utilization, sublane_utilization
+from repro.hw.tpu import (V5E, effective_element_bytes, lane_utilization,
+                          sublane_utilization)
 
 OVERLAP_GRID = 4          # grid programs needed for full DMA/compute overlap
 OCCUPANCY_BAND = (0.60, 1.00)
@@ -52,11 +53,7 @@ class AnalyticalScore:
 def _resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
     wl = space.workload
     spec = space.spec
-    eb = dtype_bytes(wl.dtype)
-    if wl.op == "tridiag":
-        eb *= 4
-    elif wl.op in ("fft", "large_fft"):
-        eb *= 2
+    eb = effective_element_bytes(wl.op, wl.dtype)
 
     if wl.op == "attention":
         grid = max(wl.batch, 1) * max(wl.n // cfg["block_q"], 1)
@@ -93,8 +90,24 @@ def _resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
             "block_bytes": block_bytes}
 
 
-def score(space: SearchSpace, cfg: Config) -> AnalyticalScore:
-    res = _resources(space, cfg)
+def resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
+    """Architectural resource accounting for one candidate config.
+
+    Public entry point for consumers that stack on the analytical model —
+    notably ``repro.tuning.ml.features``, which feeds these quantities
+    (grid depth, VMEM footprint, occupancy, ILP, pass count) to the
+    learned predictor so it reasons on top of the expert model instead of
+    re-deriving architecture from raw knobs.
+    """
+    return _resources(space, cfg)
+
+
+def score(space: SearchSpace, cfg: Config,
+          res: Optional[Dict[str, float]] = None) -> AnalyticalScore:
+    """Guideline score; pass ``res`` from :func:`resources` to avoid
+    recomputing the accounting when the caller already has it."""
+    if res is None:
+        res = _resources(space, cfg)
     spec = space.spec
     fits = res["vmem"] <= spec.vmem_budget
     full_overlap = res["grid"] >= OVERLAP_GRID and fits

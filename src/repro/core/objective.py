@@ -28,7 +28,7 @@ from repro.hw.tpu import (
     V5E,
     TpuSpec,
     dma_efficiency,
-    dtype_bytes,
+    effective_element_bytes,
     ilp_factor,
     lane_utilization,
     sublane_utilization,
@@ -169,11 +169,8 @@ class TPUCostModelObjective(Objective):
         if not space.is_valid(cfg):
             return Measurement(PENALTY_TIME, False)
         wl, spec = space.workload, self.spec
-        eb = dtype_bytes(wl.dtype)
-        if wl.op == "tridiag":
-            eb *= 4   # 4 coefficients per equation
-        elif wl.op in ("fft", "large_fft"):
-            eb *= 2   # complex
+        # tridiag: 4 coefficients per equation; fft: interleaved complex
+        eb = effective_element_bytes(wl.op, wl.dtype)
 
         work = _flops_and_passes(wl, cfg)
         batch = max(wl.batch, 1)

@@ -47,6 +47,23 @@ def dtype_bytes(dtype) -> int:
     return np.dtype(dtype).itemsize
 
 
+def effective_element_bytes(op: str, dtype) -> int:
+    """Bytes one logical element of ``op`` moves through memory.
+
+    Per-family multipliers over the raw dtype width: a tridiagonal element
+    is an equation of 4 coefficients, an FFT element is an interleaved
+    complex pair. The single source of truth for the analytical model, the
+    cost objective, and the ML featurizer — which must agree, since the
+    learned labels come from the cost model.
+    """
+    eb = dtype_bytes(dtype)
+    if op == "tridiag":
+        return 4 * eb
+    if op in ("fft", "large_fft"):
+        return 2 * eb
+    return eb
+
+
 def lane_utilization(trailing_dim: int, spec: TpuSpec = V5E) -> float:
     """Fraction of the 128-wide lane dim that does useful work.
 

@@ -1,16 +1,32 @@
-"""Offline tuning CLI — populates the TuningDB (paper's offline flow).
+"""Offline tuning CLI — populates the TuningDB and trains the ML predictor.
+
+Search (legacy flag style, unchanged):
 
   PYTHONPATH=src python -m repro.launch.tune --op scan --variant lf \
       --sizes 128,256,512 --method bayesian
   PYTHONPATH=src python -m repro.launch.tune --paper-suite   # all paper ops
 
-Runs through a :class:`repro.tuning.TunerSession`; ``--db`` selects a
-non-default store.
+ML-based methodology (paper's offline-train / online-predict flow):
+
+  PYTHONPATH=src python -m repro.launch.tune train-model \
+      --out artifacts/ml_model.npz --db artifacts/ci_tuning_db.json --seed 0
+  PYTHONPATH=src python -m repro.launch.tune eval-model \
+      --model artifacts/ml_model.npz --min-top1 0.70 --max-slowdown 1.15
+
+``train-model`` sweeps the training suite exhaustively on the TPU cost
+model (and, with ``--db``, persists each sweep's winner into that TuningDB
+— the synthetic fixture CI trains against — and folds any pre-existing
+records in as extra training rows).  ``eval-model`` reports top-1 config
+match rate and predicted-vs-best slowdown against the exhaustive optimum
+on held-out problem sizes, exiting non-zero when the pinned floors are
+violated (the CI regression gate for the learned strategy).
 """
 from __future__ import annotations
 
 import argparse
-from typing import Optional
+import json
+import sys
+from typing import List, Optional
 
 from repro.configs.paper_ops import PREFIX_OPS, TOTAL_ELEMS
 from repro.core import TPUCostModelObjective, Workload
@@ -33,31 +49,170 @@ def tune_suite(method: str, noise: float = 0.02, verbose: bool = True,
                           f"evals={res.evaluations}", flush=True)
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# ML model subcommands
+# ---------------------------------------------------------------------------
+
+def _parse_ops(arg: Optional[str]) -> Optional[List[str]]:
+    return [s for s in arg.split(",") if s] if arg else None
+
+
+def train_model_main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(prog="tune train-model",
+                                 description="Train the ML config predictor")
+    ap.add_argument("--out", required=True, help="model artifact (.npz) path")
+    ap.add_argument("--ops", default=None,
+                    help="comma list of ops (default: the full suite)")
+    ap.add_argument("--db", default=None,
+                    help="TuningDB fixture: sweep winners are stored here and "
+                         "existing records join the training set")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trees", type=int, default=48)
+    ap.add_argument("--depth", type=int, default=12)
+    ap.add_argument("--noise", type=float, default=0.0,
+                    help="cost-model jitter while sweeping (default off)")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.tuning.db import TuningDB
+    from repro.tuning.ml import (build_dataset, dataset_from_db, merge,
+                                 suite_workloads, train_bundle)
+    from repro.tuning.ml.dataset import POOLED_OPS
+
+    objective = TPUCostModelObjective(noise=args.noise)
+    try:
+        workloads = suite_workloads("train", ops=_parse_ops(args.ops))
+    except ValueError as e:
+        ap.error(str(e))
+    print(f"[train-model] sweeping {len(workloads)} workloads ...", flush=True)
+
+    prior = None
+    on_sweep = None
+    if args.db:
+        db = TuningDB(path=args.db)
+        prior = dataset_from_db(db)
+
+        def on_sweep(wl, cfgs, times):   # persist each winner: the fixture
+            i = int(np.argmin(times))
+            db.store(wl, cfgs[i], float(times[i]), "exhaustive", len(cfgs))
+
+    ds = build_dataset(workloads, objective, on_sweep=on_sweep)
+    if prior is not None and len(prior):
+        print(f"[train-model] +{len(prior)} rows from TuningDB {args.db}",
+              flush=True)
+        ds = merge(ds, prior)
+
+    print(f"[train-model] {len(ds)} rows; training "
+          f"(trees={args.trees}, depth={args.depth}, seed={args.seed})",
+          flush=True)
+    bundle = train_bundle(ds.by_op(), n_trees=args.trees,
+                          max_depth=args.depth, seed=args.seed,
+                          meta={"aliases": POOLED_OPS})
+    path = bundle.save(args.out)
+    for op, rows in sorted(bundle.meta["train_rows"].items()):
+        print(f"[train-model]   {op}: {rows} rows")
+    print(f"[train-model] saved {path}")
+    return 0
+
+
+def eval_model_main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(prog="tune eval-model",
+                                 description="Evaluate the ML config "
+                                             "predictor on held-out sizes")
+    ap.add_argument("--model", required=True, help="model artifact (.npz)")
+    ap.add_argument("--ops", default=None,
+                    help="comma list of ops (default: the full holdout suite)")
+    ap.add_argument("--min-top1", type=float, default=None,
+                    help="fail when top-1 match rate drops below this floor")
+    ap.add_argument("--max-slowdown", type=float, default=None,
+                    help="fail when mean slowdown exceeds this ceiling")
+    ap.add_argument("--min-ml-rate", type=float, default=None,
+                    help="fail when the fraction of workloads answered by "
+                         "the learned rungs (vs fallbacks) drops below this")
+    ap.add_argument("--min-rank-corr", type=float, default=None,
+                    help="fail when the forest's mean predicted-vs-true "
+                         "rank correlation drops below this (catches a "
+                         "degenerate model hiding behind analytical defers)")
+    ap.add_argument("--json", default=None, help="write the full report here")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="accepted for CLI uniformity; evaluation is "
+                         "deterministic")
+    args = ap.parse_args(argv)
+
+    from repro.tuning.ml import (ModelBundle, check_floors, evaluate_model,
+                                 suite_workloads)
+
+    bundle = ModelBundle.load(args.model)
+    try:
+        workloads = suite_workloads("holdout", ops=_parse_ops(args.ops))
+    except ValueError as e:
+        ap.error(str(e))
+    report = evaluate_model(bundle, workloads)
+
+    print(f"[eval-model] {report['n_scored']} holdout workloads scored; "
+          f"rungs: {report.get('rungs', {})}")
+    for op, r in sorted(report.get("per_op", {}).items()):
+        print(f"[eval-model]   {op:<10} top1={r['top1_rate']:5.1%}  "
+              f"mean={r['mean_slowdown']:.3f}x  max={r['max_slowdown']:.3f}x  "
+              f"(n={r['n']})")
+    if report["n_scored"]:
+        print(f"[eval-model] overall    top1={report['top1_rate']:5.1%}  "
+              f"mean={report['mean_slowdown']:.3f}x  "
+              f"max={report['max_slowdown']:.3f}x  "
+              f"ml_rate={report['ml_rate']:5.1%}  "
+              f"rank_corr={report['mean_rank_corr']:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"[eval-model] report written to {args.json}")
+
+    failures = check_floors(report, min_top1=args.min_top1,
+                            max_mean_slowdown=args.max_slowdown,
+                            min_ml_rate=args.min_ml_rate,
+                            min_rank_corr=args.min_rank_corr)
+    for failure in failures:
+        print(f"[eval-model] FAIL: {failure}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if argv and argv[0] == "train-model":
+        return train_model_main(argv[1:])
+    if argv and argv[0] == "eval-model":
+        return eval_model_main(argv[1:])
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--op", default=None)
     ap.add_argument("--variant", default="")
     ap.add_argument("--sizes", default="")
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--method", default="bayesian", choices=list(strategies()))
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--db", default=None,
                     help="path to the tuning DB (default: the session DB)")
     ap.add_argument("--paper-suite", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     session = TunerSession(db_path=args.db) if args.db else default_session()
     if args.paper_suite:
         tune_suite(args.method, session=session)
-        return
+        return 0
     assert args.op and args.sizes
     for n in [int(s) for s in args.sizes.split(",")]:
         wl = Workload(op=args.op, n=n,
                       batch=args.batch or max(TOTAL_ELEMS // n, 1),
                       variant=args.variant)
-        res = session.tune(wl, method=args.method)
+        res = session.tune(wl, method=args.method, seed=args.seed)
         print(f"[tune] {wl.key}: {res.best_config} "
               f"t={res.best_time*1e6:.1f}us evals={res.evaluations}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

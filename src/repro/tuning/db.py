@@ -9,7 +9,9 @@ Schema 2 wraps the entries in an envelope so future migrations are cheap:
 
 Legacy (schema-1) files were a flat ``{key: entry}`` mapping; ``_load``
 migrates them transparently and the next ``store`` persists the new
-envelope. Writes are atomic (tmp file + ``os.replace``) and serialized by a
+envelope. Unknown top-level envelope keys (annotations from other tools,
+future-schema side-channels) are preserved across load/flush rather than
+dropped. Writes are atomic (tmp file + ``os.replace``) and serialized by a
 lock, so concurrent ``store`` calls from threads never corrupt the file.
 """
 from __future__ import annotations
@@ -34,6 +36,7 @@ class TuningDB:
         self.platform = platform
         self._lock = threading.Lock()
         self._data: Dict[str, Dict] = {}
+        self._extra: Dict[str, object] = {}   # unknown envelope keys, kept
         self._loaded = False
 
     # -- persistence ---------------------------------------------------------
@@ -49,6 +52,11 @@ class TuningDB:
                 raw = {}
             if isinstance(raw, dict) and "schema" in raw:
                 self._data = dict(raw.get("entries") or {})
+                # preserve unknown envelope keys (annotations written by
+                # other tools, future-schema side-channels): they round-trip
+                # through the next flush instead of being dropped
+                self._extra = {k: v for k, v in raw.items()
+                               if k not in ("schema", "entries")}
             else:
                 # legacy flat {key: entry} file (schema 1)
                 self._data = raw if isinstance(raw, dict) else {}
@@ -58,7 +66,8 @@ class TuningDB:
         directory = os.path.dirname(self.path)
         if directory:
             os.makedirs(directory, exist_ok=True)
-        payload = {"schema": SCHEMA_VERSION, "entries": self._data}
+        payload = {**self._extra, "schema": SCHEMA_VERSION,
+                   "entries": self._data}
         tmp = f"{self.path}.{os.getpid()}.{threading.get_ident()}.tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

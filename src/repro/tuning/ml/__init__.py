@@ -1,0 +1,36 @@
+"""repro.tuning.ml — the paper's ML-based tuning methodology, deployable.
+
+Offline: export labeled (config, time) data from exhaustive sweeps and
+TuningDB records, train a pure-numpy random forest per kernel family, save
+a versioned ``.npz`` artifact.  Online: ``strategy="ml"`` ranks a
+workload's valid candidates through the forest in zero objective
+evaluations, falling back to the analytical model when no artifact /
+forest exists or tree disagreement is high.
+
+    PYTHONPATH=src python -m repro.launch.tune train-model --out artifacts/ml_model.npz
+    PYTHONPATH=src python -m repro.launch.tune eval-model  --model artifacts/ml_model.npz
+
+    session.tune(wl, method="ml")      # via the strategy registry
+
+See docs/tuning.md ("ML-based tuning") for the full lifecycle.
+"""
+from repro.tuning.ml.dataset import (Dataset, build_dataset, dataset_from_db,
+                                     merge, parse_db_key, split_by_size,
+                                     suite_workloads, sweep_workload, SUITE)
+from repro.tuning.ml.evaluate import check_floors, evaluate_model
+from repro.tuning.ml.features import (FEATURE_NAMES, FEATURE_VERSION,
+                                      N_FEATURES, featurize, featurize_batch)
+from repro.tuning.ml.forest import (Forest, MODEL_SCHEMA, ModelArtifactError,
+                                    ModelBundle, train_bundle)
+from repro.tuning.ml.strategy import (DEFAULT_MODEL_PATH, MLStrategy,
+                                      default_model_path, default_strategy)
+
+__all__ = [
+    "Dataset", "DEFAULT_MODEL_PATH", "FEATURE_NAMES", "FEATURE_VERSION",
+    "Forest", "MLStrategy", "MODEL_SCHEMA", "ModelArtifactError",
+    "ModelBundle", "N_FEATURES", "SUITE", "build_dataset", "check_floors",
+    "dataset_from_db", "default_model_path", "default_strategy",
+    "evaluate_model", "featurize",
+    "featurize_batch", "merge", "parse_db_key", "split_by_size",
+    "suite_workloads", "sweep_workload", "train_bundle",
+]

@@ -122,3 +122,15 @@ def normalizer_for(op: str) -> Normalizer:
 
 def registered_kernels() -> Dict[str, KernelSpec]:
     return dict(_KERNELS)
+
+
+def known_ops() -> Tuple[str, ...]:
+    """Every op name the registry can resolve (imported or lazily known).
+
+    The ML training suite (``repro.tuning.ml.dataset.SUITE``) must cover
+    exactly this set — a test enforces it, so registering a new
+    ``@tuned_kernel`` op forces the author to declare its train/holdout
+    sizes rather than silently shipping a kernel the predictor never
+    learns.
+    """
+    return tuple(sorted(set(_OP_MODULES) | set(_BY_OP)))

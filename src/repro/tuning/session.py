@@ -66,11 +66,22 @@ def _analytical(space, objective, *, seed: int = 0, max_evals: int = 0) -> TuneR
     return TuneResult(cfg, m.time_s, 0, [(cfg, m.time_s)], "analytical")
 
 
+def _ml(space, objective, *, seed: int = 0, max_evals: int = 0) -> TuneResult:
+    # lazy import: the forest/feature stack only loads when strategy="ml" is
+    # actually used. Resolution ladder: ml -> analytical -> default (see
+    # repro.tuning.ml.strategy — the fallback is inside MLStrategy, so this
+    # always returns a config even with no model artifact on disk).
+    from repro.tuning.ml.strategy import default_strategy
+    return default_strategy().tune(space, objective, seed=seed,
+                                   max_evals=max_evals)
+
+
 _STRATEGIES: Dict[str, Strategy] = {
     "bayesian": _bayesian,
     "exhaustive": _exhaustive,
     "random": _random,
     "analytical": _analytical,
+    "ml": _ml,
 }
 
 

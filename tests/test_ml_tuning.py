@@ -1,0 +1,311 @@
+"""repro.tuning.ml: features, forest, dataset, strategy, evaluation."""
+import numpy as np
+import pytest
+
+from repro.core import TPUCostModelObjective, Workload, build_space
+from repro.core.objective import Measurement, Objective
+from repro.tuning.ml import (FEATURE_NAMES, MLStrategy, ModelArtifactError,
+                             ModelBundle, N_FEATURES, build_dataset,
+                             check_floors, dataset_from_db, evaluate_model,
+                             featurize, featurize_batch, merge, parse_db_key,
+                             split_by_size, suite_workloads, sweep_workload,
+                             train_bundle)
+from repro.tuning.ml.dataset import POOLED_OPS, SUITE
+from repro.tuning.ml.forest import Forest
+
+
+class CountingObjective(Objective):
+    """Fails the test if the 'zero online evaluations' contract is broken."""
+
+    def __init__(self):
+        self.calls = 0
+        self.inner = TPUCostModelObjective()
+
+    def __call__(self, space, cfg):
+        self.calls += 1
+        return self.inner(space, cfg)
+
+
+def _wl(op="scan", n=256, batch=4096, variant="ks"):
+    return Workload(op=op, n=n, batch=batch, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# fixtures: one tiny bundle shared by the strategy/eval tests
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_bundle():
+    """Small-but-complete bundle: every op, reduced sizes and trees."""
+    workloads = []
+    for op, spec in SUITE.items():
+        for variant in spec["variants"][:1]:
+            for n in spec["train"][:2]:
+                batch = spec.get("batch") or max(2 ** 26 // n, 1)
+                workloads.append(Workload(op=op, n=n, batch=batch,
+                                          variant=variant))
+    ds = build_dataset(workloads)
+    return train_bundle(ds.by_op(), n_trees=8, max_depth=10, seed=0,
+                        meta={"aliases": POOLED_OPS})
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+def test_featurize_deterministic_fixed_length():
+    wl = _wl().canonical()
+    space = build_space(wl)
+    cfgs = space.enumerate_valid()
+    X1 = featurize_batch(space, cfgs)
+    X2 = featurize_batch(space, cfgs)
+    assert X1.shape == (len(cfgs), N_FEATURES)
+    assert len(FEATURE_NAMES) == N_FEATURES
+    np.testing.assert_array_equal(X1, X2)
+    assert np.isfinite(X1).all()
+
+
+def test_featurize_batch_context_columns():
+    wl = _wl().canonical()
+    space = build_space(wl)
+    cfgs = space.enumerate_valid()
+    X = featurize_batch(space, cfgs)
+    pct = X[:, FEATURE_NAMES.index("ana_rank_pct")]
+    # a full percentile sweep: best candidate 1.0, worst 0.0
+    assert pct.max() == pytest.approx(1.0) and pct.min() == pytest.approx(0.0)
+    for col in ("tier_rel", "radix_rank_rel", "block_rank_rel",
+                "dma_eff_rel"):
+        rel = X[:, FEATURE_NAMES.index(col)]
+        assert rel.max() == pytest.approx(0.0)  # relative to the best present
+        assert (rel <= 0).all()
+    # single-row featurize keeps neutral context defaults
+    row = featurize(space, cfgs[0])
+    assert row[FEATURE_NAMES.index("ana_rank_pct")] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# forest
+# ---------------------------------------------------------------------------
+
+def test_forest_fits_simple_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-1, 1, size=(600, 5))
+    y = 2.0 * X[:, 0] + (X[:, 1] > 0).astype(float)
+    forest = Forest.fit(X, y, n_trees=12, max_depth=8, seed=0)
+    mean, std = forest.predict(X)
+    assert float(np.mean((mean - y) ** 2)) < 0.05
+    assert std.shape == mean.shape == (len(X),)
+
+
+def test_bundle_save_load_roundtrip(tmp_path, tiny_bundle):
+    path = str(tmp_path / "model.npz")
+    tiny_bundle.save(path)
+    loaded = ModelBundle.load(path)
+    assert set(loaded.ops()) == set(tiny_bundle.ops())
+    wl = _wl().canonical()
+    space = build_space(wl)
+    cfgs = space.enumerate_valid()
+    X = featurize_batch(space, cfgs)
+    m1, s1 = tiny_bundle.forest_for("scan").predict(X)
+    m2, s2 = loaded.forest_for("scan").predict(X)
+    np.testing.assert_allclose(m1, m2)
+    np.testing.assert_allclose(s1, s2)
+
+
+def test_bundle_load_rejects_missing_and_stale(tmp_path, tiny_bundle):
+    with pytest.raises(ModelArtifactError):
+        ModelBundle.load(str(tmp_path / "nope.npz"))
+    path = str(tmp_path / "stale.npz")
+    tiny_bundle.meta["feature_version"] = -1
+    try:
+        tiny_bundle.save(path)
+        with pytest.raises(ModelArtifactError):
+            ModelBundle.load(path)
+    finally:
+        from repro.tuning.ml.features import FEATURE_VERSION
+        tiny_bundle.meta["feature_version"] = FEATURE_VERSION
+
+
+def test_bundle_aliases_route_pooled_ops(tiny_bundle):
+    assert tiny_bundle.forest_for("ssd") is tiny_bundle.forest_for("scan")
+    assert tiny_bundle.forest_for("rglru") is tiny_bundle.forest_for("scan")
+    assert tiny_bundle.forest_for("unknown-op") is None
+
+
+# ---------------------------------------------------------------------------
+# dataset
+# ---------------------------------------------------------------------------
+
+def test_dataset_labels_are_log_slowdown_per_group():
+    ds = build_dataset([_wl(n=128, batch=1024), _wl(n=256, batch=2048)])
+    assert len(ds.keys) == 2
+    for gid in range(len(ds.keys)):
+        labels = ds.y[ds.group == gid]
+        assert labels.min() == pytest.approx(0.0)   # winner pinned at 0
+        assert (labels >= 0).all()
+
+
+def test_dataset_merge_and_split_by_size():
+    a = build_dataset([_wl(n=128, batch=1024)])
+    b = build_dataset([_wl(n=256, batch=2048)])
+    m = merge(a, b)
+    assert len(m) == len(a) + len(b) and len(m.keys) == 2
+    wls = [_wl(n=n, batch=1024) for n in (128, 256, 512)]
+    train, hold = split_by_size(wls, {"scan": [256]})
+    assert [w.n for w in hold] == [256]
+    assert sorted(w.n for w in train) == [128, 512]
+
+
+def test_suite_holdout_sizes_disjoint_from_train():
+    for op, spec in SUITE.items():
+        assert not set(spec["train"]) & set(spec["holdout"]), op
+
+
+def test_suite_covers_every_registered_op():
+    """Registering a new @tuned_kernel op without declaring train/holdout
+    sizes in SUITE must fail here, not silently skip training for it."""
+    from repro.tuning.registry import known_ops
+    assert set(SUITE) == set(known_ops())
+
+
+def test_suite_workloads_rejects_unknown_op():
+    with pytest.raises(ValueError, match="atention"):
+        suite_workloads("train", ops=["scan", "atention"])
+
+
+def test_parse_db_key_roundtrip():
+    wl = _wl(op="fft", n=1024, batch=65536, variant="stockham").canonical()
+    parsed = parse_db_key(f"tpu_v5e|{wl.key}")
+    assert parsed == wl
+    assert parse_db_key("garbage") is None
+    assert parse_db_key("tpu_v5e|scan:default:nX:b1:float32") is None
+
+
+def test_dataset_from_db(tmp_path):
+    from repro.tuning.db import TuningDB
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    wl = _wl().canonical()
+    cfgs, _, times = sweep_workload(wl)
+    i = int(np.argmin(times))
+    db.store(wl, cfgs[i], float(times[i]), "exhaustive", len(cfgs))
+    db.store(_wl(op="nope", n=64, batch=1), {"tile_n": 64}, 1e-4, "x", 1)
+    # a bayesian winner is NOT the proven group optimum: labeling it 0.0
+    # would teach the forest a mediocre pattern is optimal, so it's skipped
+    db.store(_wl(n=512, batch=2048).canonical(), cfgs[i], 2e-4, "bayesian", 8)
+    ds = dataset_from_db(db)
+    assert len(ds) == 1                      # unknown op + non-exhaustive skipped
+    assert ds.ops == ["scan"]
+    assert ds.X.shape == (1, N_FEATURES)
+    assert len(dataset_from_db(db, methods=("exhaustive", "bayesian"))) == 2
+
+
+# ---------------------------------------------------------------------------
+# strategy: zero evaluations, fallback ladder
+# ---------------------------------------------------------------------------
+
+ALL_OPS = ("scan", "tridiag", "fft", "large_fft", "ssd", "rglru",
+           "attention", "matmul")
+
+
+def test_ml_strategy_zero_evaluations_all_ops(tiny_bundle):
+    """Acceptance: strategy='ml' resolves every registered op with zero
+    online kernel evaluations — ``choose`` never touches an objective at
+    all, and ``tune`` spends exactly one measurement on the winner so the
+    persisted time_s is real seconds (search evaluations stay 0)."""
+    strategy = MLStrategy(model=tiny_bundle)
+    for op in ALL_OPS:
+        spec = SUITE[op]
+        n = spec["holdout"][0]
+        batch = spec.get("batch") or max(2 ** 26 // n, 1)
+        wl = Workload(op=op, n=n, batch=batch,
+                      variant=spec["variants"][0]).canonical()
+        space = build_space(wl)
+        cfgs = space.enumerate_valid()
+        pick, rung = strategy.choose(space, cfgs)     # no objective exists
+        assert rung in ("ml", "ml-defer-analytical"), op
+        assert space.is_valid(cfgs[pick]), op
+
+        counting = CountingObjective()
+        res = strategy.tune(space, counting)
+        assert counting.calls == 1, op                # winner measured once
+        assert res.evaluations == 0, op               # zero search evals
+        assert res.stopped_by == rung, op
+        assert res.best_config == dict(cfgs[pick]), op
+        # best_time is that single real measurement, not a relative score
+        assert res.best_time == counting.inner(space, res.best_config).time_s
+
+
+def test_ml_strategy_fallback_no_model(tmp_path):
+    strategy = MLStrategy(model_path=str(tmp_path / "missing.npz"))
+    wl = _wl().canonical()
+    space = build_space(wl)
+    counting = CountingObjective()
+    res = strategy.tune(space, counting)
+    assert res.stopped_by == "ml-fallback:no-model"
+    assert counting.calls == 1                 # analytical fallback measures
+    assert space.is_valid(res.best_config)
+
+
+def test_ml_strategy_fallback_no_forest(tiny_bundle):
+    bundle = ModelBundle({"scan": tiny_bundle.forests["scan"]}, {})
+    strategy = MLStrategy(model=bundle)
+    wl = _wl(op="matmul", n=512, batch=512, variant="").canonical()
+    res = strategy.tune(build_space(wl), CountingObjective())
+    assert res.stopped_by == "ml-fallback:no-forest:matmul"
+
+
+def test_ml_strategy_fallback_low_confidence(tiny_bundle):
+    strategy = MLStrategy(model=tiny_bundle, max_std=-1.0)
+    wl = _wl().canonical()
+    res = strategy.tune(build_space(wl), CountingObjective())
+    assert res.stopped_by == "ml-fallback:low-confidence"
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def test_evaluate_model_report_shape_and_floors(tiny_bundle):
+    wls = [w for w in suite_workloads("holdout", ops=["scan", "fft"])]
+    report = evaluate_model(tiny_bundle, wls)
+    assert report["n_scored"] == len(wls)
+    assert 0.0 <= report["top1_rate"] <= 1.0
+    assert report["mean_slowdown"] >= 1.0
+    assert sum(report["rungs"].values()) == len(wls)
+    assert report["ml_rate"] == 1.0            # trained ops: no fallbacks
+    assert -1.0 <= report["mean_rank_corr"] <= 1.0
+    # quality guard on the tiny model; CI pins the real floors (0.70/1.15)
+    # on the fully-trained artifact
+    assert report["mean_slowdown"] <= 1.10
+    assert not check_floors(report, max_mean_slowdown=1.10, min_ml_rate=0.9)
+    failures = check_floors(report, min_top1=1.01)
+    assert failures and "top-1" in failures[0]
+
+
+def test_evaluate_model_counts_fallbacks_against_ml_rate(tiny_bundle):
+    """A model whose predictions are all low-confidence still gets scored
+    (the analytical fallback is what ships) but cannot pass an ml_rate
+    floor — the gate the CI job pins."""
+    bundle = ModelBundle(tiny_bundle.forests,
+                         dict(tiny_bundle.meta, aliases=POOLED_OPS))
+    wls = suite_workloads("holdout", ops=["scan"])
+    strategy_report = evaluate_model(bundle, wls)
+    assert strategy_report["ml_rate"] == 1.0
+    # drop the scan forest: every scan workload must fall back, be scored,
+    # and drag ml_rate to 0
+    no_scan = ModelBundle({op: f for op, f in tiny_bundle.forests.items()
+                           if op != "scan"}, {})
+    report = evaluate_model(no_scan, wls)
+    assert report["n_scored"] == len(wls)      # fallbacks are not dropped
+    assert report["ml_rate"] == 0.0
+    assert all(r["rung"].startswith("ml-fallback:no-forest")
+               for r in report["workloads"])
+    failures = check_floors(report, min_ml_rate=0.9)
+    assert failures and "learned-rung rate" in failures[0]
+    # with no forest there is no learned ranking to correlate either
+    assert report["mean_rank_corr"] == 0.0
+    assert check_floors(report, min_rank_corr=0.8)
+
+
+def test_check_floors_empty_report():
+    assert check_floors({"n_scored": 0}, min_top1=0.5)

@@ -7,8 +7,9 @@ import warnings
 import pytest
 
 from repro.core import TuningDB, Workload, build_space, get_config, tune_offline
-from repro.tuning import (TunerSession, default_session, overrides,
-                          registered_kernels, set_default_session)
+from repro.tuning import (TunerSession, default_session, get_strategy,
+                          overrides, registered_kernels, set_default_session,
+                          strategies)
 from repro.tuning.db import SCHEMA_VERSION
 
 
@@ -136,6 +137,41 @@ def test_overrides_reject_non_mapping():
             pass
 
 
+def test_overrides_nest_independently_across_threads(tmp_path):
+    """Each thread owns its stack: nesting in a worker neither sees nor
+    disturbs the main thread's frames, and vice versa."""
+    s = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = _wl()
+    base = s.resolve(wl)
+    results = {}
+    barrier = threading.Barrier(2, timeout=10)
+
+    def worker():
+        with overrides(scan={"radix": 2}):
+            with overrides(scan={"unroll": 4}):
+                barrier.wait()               # main thread is inside radix=8
+                results["worker_inner"] = s.resolve(wl)
+            results["worker_outer"] = s.resolve(wl)
+        results["worker_done"] = s.resolve(wl)
+
+    t = threading.Thread(target=worker)
+    with overrides(scan={"radix": 8}):
+        t.start()
+        barrier.wait()
+        results["main_inner"] = s.resolve(wl)
+        t.join()
+        # worker's frames never leaked into this thread
+        assert s.resolve(wl)["radix"] == 8
+    assert results["main_inner"]["radix"] == 8
+    assert results["main_inner"]["unroll"] == base["unroll"]
+    assert results["worker_inner"]["radix"] == 2
+    assert results["worker_inner"]["unroll"] == 4
+    assert results["worker_outer"]["radix"] == 2
+    assert results["worker_outer"]["unroll"] == base["unroll"]
+    assert results["worker_done"] == base
+    assert s.resolve(wl) == base
+
+
 # ---------------------------------------------------------------------------
 # deprecation shims
 # ---------------------------------------------------------------------------
@@ -203,6 +239,39 @@ def test_db_migrates_legacy_flat_file(tmp_path):
         raw = json.load(f)
     assert raw["schema"] == SCHEMA_VERSION
     assert legacy_key in raw["entries"]
+
+
+def test_db_envelope_preserves_unknown_extra_keys(tmp_path):
+    """Round-trip: unknown top-level keys in a schema-2 envelope survive
+    load -> store -> reload instead of being dropped."""
+    path = str(tmp_path / "db.json")
+    wl = _wl()
+    envelope = {
+        "schema": SCHEMA_VERSION,
+        "entries": {f"tpu_v5e|{wl.key}": {"config": {"tile_n": 64},
+                                          "time_s": 1e-4, "method": "bayesian",
+                                          "evaluations": 5}},
+        "meta": {"written_by": "offline-sweeper", "host": "tpu-pod-7"},
+        "x-annotations": ["keep", "me"],
+    }
+    with open(path, "w") as f:
+        json.dump(envelope, f)
+    db = TuningDB(path=path)
+    assert db.lookup(wl) == {"tile_n": 64}
+    db.store(_wl(n=512), {"tile_n": 128}, 2e-4, "random", 1)
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["schema"] == SCHEMA_VERSION
+    assert raw["meta"] == envelope["meta"]
+    assert raw["x-annotations"] == ["keep", "me"]
+    assert len(raw["entries"]) == 2
+    # and a fresh handle keeps preserving them on its own writes
+    db2 = TuningDB(path=path)
+    db2.store(_wl(n=1024), {"tile_n": 256}, 3e-4, "random", 1)
+    with open(path) as f:
+        raw2 = json.load(f)
+    assert raw2["meta"] == envelope["meta"]
+    assert raw2["x-annotations"] == ["keep", "me"]
 
 
 def test_db_store_with_bare_filename_path(tmp_path, monkeypatch):
@@ -286,6 +355,56 @@ def test_warm_resolve_much_faster_than_miss_path(tmp_path):
     miss = (time.perf_counter() - t0) / 3
 
     assert miss / max(warm, 1e-9) >= 10, (warm, miss)
+
+
+def test_strategy_registry_fallback_order_ml_analytical_default(tmp_path,
+                                                                monkeypatch):
+    """strategy='ml' resolves through the ladder: learned model when an
+    artifact exists -> analytical when it doesn't -> the generic guideline
+    default, never an error."""
+    from repro.core import CachedObjective, TPUCostModelObjective
+    from repro.core.analytical import AnalyticalTuner
+    from repro.tuning.ml import build_dataset, train_bundle
+    from repro.tuning.ml.dataset import POOLED_OPS
+
+    assert "ml" in strategies()
+    wl = _wl().canonical()
+    space = build_space(wl)
+
+    # rung 2/3: no artifact on disk -> analytical answers (which itself is
+    # the guideline's space-wide default ranking, so a config always comes
+    # back); the strategy records why
+    monkeypatch.setenv("REPRO_ML_MODEL", str(tmp_path / "missing.npz"))
+    res = get_strategy("ml")(space, CachedObjective(TPUCostModelObjective()))
+    assert res.stopped_by == "ml-fallback:no-model"
+    assert res.best_config == AnalyticalTuner().suggest(space)
+
+    # rung 1: train + publish an artifact -> the learned model answers with
+    # zero objective evaluations, via the same registry entry
+    ds = build_dataset([_wl(n=128, batch=2048), _wl(n=256, batch=2048)])
+    bundle = train_bundle(ds.by_op(), n_trees=8, max_depth=8, seed=0,
+                          meta={"aliases": POOLED_OPS})
+    path = str(tmp_path / "model.npz")
+    bundle.save(path)
+    monkeypatch.setenv("REPRO_ML_MODEL", path)
+    cached = CachedObjective(TPUCostModelObjective())
+    res = get_strategy("ml")(space, cached)
+    assert res.stopped_by in ("ml", "ml-defer-analytical")
+    # zero search evaluations; the one objective call measures the winner
+    assert res.evaluations == 0 and cached.evaluations == 1
+    assert space.is_valid(res.best_config)
+
+    # rung 2 again, per-op: an op the bundle has no forest for falls back
+    mm = Workload(op="matmul", n=512, batch=512).canonical()
+    res = get_strategy("ml")(build_space(mm),
+                             CachedObjective(TPUCostModelObjective()))
+    assert res.stopped_by == "ml-fallback:no-forest:matmul"
+
+    # and the session API reaches the same ladder end-to-end
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    tuned = session.tune(wl, method="ml")
+    assert tuned.stopped_by in ("ml", "ml-defer-analytical")
+    assert session.lookup(wl) == tuned.best_config
 
 
 def test_set_default_session_swaps(tmp_path):
