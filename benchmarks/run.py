@@ -7,6 +7,7 @@ Prints ``name,...`` CSV rows:
   fig4 / fig4d        — BO candidate-evaluation counts (+ control vs random);
   roofline            — per (arch x shape) three-term roofline summary;
   resolve             — TunerSession online hot-path vs seed miss path;
+  sweep               — vectorized sweep engine vs seed per-config loop;
   ml_predict          — learned-predictor rank latency + holdout accuracy.
 
 ``--seed`` flows into every stochastic section so CI runs are
@@ -26,7 +27,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
-                         "resolve,ml_predict")
+                         "resolve,sweep,ml_predict")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -64,6 +65,9 @@ def main() -> None:
     if begin("resolve"):
         from benchmarks.bench_resolve import run as run_resolve
         run_resolve(emit)
+    if begin("sweep"):
+        from benchmarks.bench_sweep import run as run_sweep_bench
+        run_sweep_bench(emit)
     if begin("ml_predict"):
         from benchmarks.bench_ml_predict import run as run_ml
         run_ml(emit, seed=args.seed, smoke=args.smoke)

@@ -66,15 +66,18 @@ class GP:
         return mu * self.y_std + self.y_mean, np.sqrt(var) * self.y_std
 
 
+# elementwise math.erf: exact to double precision and keeps this module's
+# "pure numpy; no external deps" contract (scipy is only a transitive
+# extra of jax and absent from requirements-ci.txt)
+_erf = np.vectorize(math.erf, otypes=[np.float64])
+
+
 def expected_improvement(mu: np.ndarray, sigma: np.ndarray, best: float) -> np.ndarray:
     """EI for minimization (Mockus 1975, the paper's acquisition)."""
     sigma = np.maximum(sigma, 1e-12)
     z = (best - mu) / sigma
     phi = np.exp(-0.5 * z**2) / math.sqrt(2 * math.pi)
-    # standard normal CDF via erf
-    from scipy.special import erf  # scipy available offline
-
-    cdf = 0.5 * (1.0 + erf(z / math.sqrt(2)))
+    cdf = 0.5 * (1.0 + _erf(z / math.sqrt(2)))
     return (best - mu) * cdf + sigma * phi
 
 

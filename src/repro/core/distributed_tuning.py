@@ -28,6 +28,7 @@ from repro.core.bayesian import BayesianTuner, TuneResult
 from repro.core.exhaustive import ExhaustiveSearch
 from repro.core.objective import Measurement, Objective, PENALTY_TIME
 from repro.core.space import Config, ParamSpec, SearchSpace, Workload
+from repro.hw.tpu import V5E
 
 
 def distributed_space(arch: str, shape: str, is_moe: bool = False,
@@ -43,6 +44,36 @@ def distributed_space(arch: str, shape: str, is_moe: bool = False,
 
 
 HBM_BYTES = 16 * 2**30
+
+# per-extra-micro-step dispatch + accumulation-barrier cost (the scan body
+# is re-dispatched and the carry flushed once per micro step)
+MICRO_STEP_SYNC_S = 20e-6
+
+
+def micro_step_overhead_s(micro_steps: int, grad_bytes_per_dev: float,
+                          spec=V5E) -> float:
+    """Cost of gradient accumulation the compiled roofline cannot see.
+
+    The trip-count-exact jaxpr roofline already counts the micro-step
+    scan's compute and weight re-reads, but its fused-elementwise bytes
+    model treats the f32 gradient-accumulator ``g_acc + g`` as free — in
+    reality every extra micro step pays a full read-modify-write of the
+    per-device gradient shard through HBM, plus a dispatch/sync.  Charging
+    it here is what makes ``micro_steps`` a real trade-off (smaller
+    activation footprint vs accumulation traffic) instead of a free knob.
+    """
+    extra = max(int(micro_steps), 1) - 1
+    if extra == 0:
+        return 0.0
+    rmw = 2.0 * max(grad_bytes_per_dev, 0.0) / spec.hbm_bandwidth
+    return extra * (rmw + MICRO_STEP_SYNC_S)
+
+
+def step_time_from_record(rec: Dict, cfg: Config,
+                          grad_bytes_per_dev: float = 0.0) -> float:
+    """Full-step objective time for ``cfg`` given one roofline record."""
+    return float(rec["step_time_bound_s"]) + micro_step_overhead_s(
+        cfg.get("micro_steps", 1), grad_bytes_per_dev)
 
 
 class CompiledRooflineObjective(Objective):
@@ -84,12 +115,15 @@ class CompiledRooflineObjective(Objective):
             # configs still order (helps the surrogate learn the cliff)
             return Measurement(PENALTY_TIME * (peak / HBM_BYTES), False,
                                meta={"peak_bytes": peak})
-        t = rec["step_time_bound_s"] * cfg["micro_steps"] if False else \
-            rec["step_time_bound_s"]
+        from repro.launch.params import total_param_count
+        chips = max(int(rec.get("chips", 1)), 1)
+        grad_bytes_dev = 4.0 * total_param_count(arch_cfg) / chips
+        t = step_time_from_record(rec, cfg, grad_bytes_dev)
         return Measurement(
             t, True,
             meta={"peak_bytes": peak, **rec["roofline"],
-                  "dominant": rec["dominant"]})
+                  "dominant": rec["dominant"],
+                  "micro_overhead_s": t - rec["step_time_bound_s"]})
 
 
 def tune_distributed(arch: str, shape: str, method: str = "bayesian",

@@ -12,23 +12,39 @@ from repro.core.space import Config, SearchSpace
 
 class ExhaustiveSearch:
     """Evaluates every valid configuration. Guarantees the optimum; used to
-    compute the paper's Phi metric denominators."""
+    compute the paper's Phi metric denominators.
+
+    Runs on the ``repro.tuning.sweep`` engine: candidates are evaluated in
+    vectorized batches through ``Objective.batch_eval``; with
+    ``journal_dir`` each chunk checkpoints to a per-(workload, objective)
+    JSONL journal so interrupted sweeps resume instead of restarting, and
+    ``prune="analytical"`` measures only the ``top_k`` model-ranked
+    candidates (``stopped_by`` then truthfully reports ``"pruned"`` —
+    a pruned sweep no longer guarantees the optimum).
+    """
 
     name = "exhaustive"
 
+    def __init__(self, journal_dir: Optional[str] = None,
+                 prune: Optional[str] = None, top_k: Optional[int] = None,
+                 chunk: int = 1024):
+        self.journal_dir = journal_dir
+        self.prune = prune
+        self.top_k = top_k
+        self.chunk = chunk
+
     def tune(self, space: SearchSpace, objective: Objective) -> TuneResult:
-        history: List[Tuple[Config, float]] = []
-        best_cfg: Optional[Config] = None
-        best_t = float("inf")
-        for cfg in space.enumerate_valid():
-            m = objective(space, cfg)
-            t = m.time_s if m.valid else PENALTY_TIME
-            history.append((cfg, t))
-            if t < best_t:
-                best_cfg, best_t = cfg, t
-        if best_cfg is None:
-            raise ValueError(f"empty search space for {space.workload.key}")
-        return TuneResult(best_cfg, best_t, len(history), history, "exhausted")
+        # deferred import: repro.tuning.session imports this module
+        from repro.tuning.sweep import SweepJournal, run_sweep
+
+        journal = None
+        if self.journal_dir:
+            journal = SweepJournal.for_workload(self.journal_dir,
+                                                space.workload, objective)
+        result = run_sweep(space, objective, journal=journal,
+                           prune=self.prune, top_k=self.top_k,
+                           chunk=self.chunk)
+        return result.as_tune_result()
 
 
 class RandomSearch:
@@ -56,4 +72,8 @@ class RandomSearch:
             history.append((cfg, t))
             if t < best_t:
                 best_cfg, best_t = cfg, t
-        return TuneResult(best_cfg, best_t, len(history), history, "max_evals")
+        # same semantics as BayesianTuner: "max_evals" only when the budget
+        # was the binding constraint; a full enumeration is "exhausted"
+        stopped_by = "max_evals" if len(history) >= self.max_evals \
+            else "exhausted"
+        return TuneResult(best_cfg, best_t, len(history), history, stopped_by)

@@ -21,17 +21,23 @@ import dataclasses
 import hashlib
 import math
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
 
 from repro.core.space import Config, SearchSpace, Workload
 from repro.hw.tpu import (
     V5E,
     TpuSpec,
     dma_efficiency,
+    dma_efficiency_arr,
     effective_element_bytes,
     ilp_factor,
+    ilp_factor_arr,
     lane_utilization,
+    lane_utilization_arr,
     sublane_utilization,
+    sublane_utilization_arr,
 )
 
 PENALTY_TIME = 60.0  # seconds — the paper's 1-minute clamp
@@ -50,6 +56,30 @@ class Objective:
     def __call__(self, space: SearchSpace, cfg: Config) -> Measurement:
         raise NotImplementedError
 
+    def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
+                   assume_valid: bool = False) -> np.ndarray:
+        """Evaluate a whole candidate set; returns penalty-clamped times (s).
+
+        The default walks ``__call__`` config by config; objectives with a
+        closed-form model override this with a vectorized fast path (the
+        sweep engine feeds it thousands of candidates at once).
+        ``assume_valid`` lets callers that enumerated the space skip the
+        per-config validity re-check.
+        """
+        out = np.empty(len(cfgs), dtype=np.float64)
+        for i, cfg in enumerate(cfgs):
+            m = self(space, cfg)
+            out[i] = m.time_s if m.valid else PENALTY_TIME
+        return out
+
+    def signature(self) -> str:
+        """Stable identity used to key sweep journals (see tuning/sweep.py).
+
+        Two objectives with the same signature must assign the same time to
+        the same (workload, config); override when parameters change that.
+        """
+        return type(self).__name__
+
 
 class WallClockObjective(Objective):
     """Times `runner(workload, config) -> callable()` on the host.
@@ -65,6 +95,14 @@ class WallClockObjective(Objective):
         self.reps = reps
         self.warmup = warmup
         self.timeout_s = timeout_s
+
+    def signature(self) -> str:
+        # the runner decides what is measured: journals keyed by a bare
+        # class name would happily resume another kernel's times
+        runner_id = f"{getattr(self.runner, '__module__', '?')}." \
+                    f"{getattr(self.runner, '__qualname__', repr(self.runner))}"
+        return (f"wallclock:{runner_id}:reps={self.reps}"
+                f":warmup={self.warmup}:timeout={self.timeout_s}")
 
     def __call__(self, space: SearchSpace, cfg: Config) -> Measurement:
         if not space.is_valid(cfg):
@@ -140,6 +178,127 @@ def _flops_and_passes(wl: Workload, cfg: Config) -> Dict[str, float]:
         out["passes"] = 1
         out["steps"] = 1
     out.setdefault("mixed_radix", 0.0)
+    return out
+
+
+def _knob(cfgs: Sequence[Config], name: str, default) -> np.ndarray:
+    return np.array([c.get(name, default) for c in cfgs], dtype=np.float64)
+
+
+class _KnobCols:
+    """One-pass knob extraction for a homogeneous candidate set.
+
+    Configs coming out of ``enumerate_valid`` (and journal replays of them)
+    all share one key order, so the whole knob table is a single
+    ``np.array`` of ``c.values()`` — the per-knob ``dict.get`` loops were
+    75% of the batched evaluation cost. Heterogeneous sets fall back to the
+    per-knob path transparently.
+    """
+
+    def __init__(self, cfgs: Sequence[Config]):
+        import itertools
+        import operator
+
+        self.cfgs = cfgs
+        self.cols: Dict[str, np.ndarray] = {}
+        if not cfgs:
+            return
+        names = tuple(cfgs[0].keys())
+        k = len(names)
+        if k < 2:
+            return
+        # itemgetter extracts BY NAME, so differing key orders cannot be
+        # mis-columned; a config missing a knob raises KeyError (fall back
+        # to per-knob gets), and the length sum rules out extra knobs that
+        # the table would otherwise silently answer with defaults
+        if sum(map(len, cfgs)) != len(cfgs) * k:
+            return
+        getter = operator.itemgetter(*names)
+        try:
+            mat = np.fromiter(
+                itertools.chain.from_iterable(map(getter, cfgs)),
+                dtype=np.float64, count=len(cfgs) * k).reshape(len(cfgs), k)
+        except KeyError:
+            return
+        self.cols = {nm: mat[:, j] for j, nm in enumerate(names)}
+
+    def get(self, name: str, default) -> np.ndarray:
+        col = self.cols.get(name)
+        if col is not None:
+            return col
+        if self.cols:   # homogeneous set without this knob: broadcast default
+            return np.full(len(self.cfgs), float(default))
+        return _knob(self.cfgs, name, default)
+
+
+def _mixed_radix_arr(tile: np.ndarray, r: np.ndarray) -> np.ndarray:
+    """Vectorized mixed() from _flops_and_passes: 1.0 when radix^k != tile."""
+    k = np.where(r > 1,
+                 np.rint(np.log(np.maximum(tile, 2)) / np.log(np.maximum(r, 2))),
+                 1.0)
+    return np.where(np.power(r, k) == tile, 0.0, 1.0)
+
+
+def _batch_work(wl: Workload, cfgs: Sequence[Config],
+                cols: Optional[_KnobCols] = None) -> Dict[str, np.ndarray]:
+    """Vectorized `_flops_and_passes`: arrays over the candidate axis.
+
+    Element-for-element identical to the scalar model (same formulas, same
+    double-precision ops), so batched sweeps and per-config evaluation
+    produce the same times.
+    """
+    cols = cols or _KnobCols(cfgs)
+    n = wl.n
+    tile_n = cols.get("tile_n", n)
+    r = cols.get("radix", 2)
+    out: Dict[str, np.ndarray] = {}
+    ones = np.ones(len(cfgs), dtype=np.float64)
+
+    if wl.op in ("scan", "ssd", "rglru"):
+        log_r = np.log(np.maximum(r, 2))
+        log_tile = np.log(np.maximum(tile_n, 2))
+        steps = np.ceil(log_tile / log_r)
+        out["flops"] = steps * n * (r - 1) / np.maximum(r / 2, 1)
+        out["passes"] = np.where(
+            tile_n < n,
+            np.ceil(np.log(max(n, 2)) / log_r / (log_tile / log_r)), 1.0)
+        out["steps"] = steps
+        out["mixed_radix"] = _mixed_radix_arr(tile_n, r)
+    elif wl.op == "tridiag":
+        if wl.variant in ("cr", "pcr"):
+            steps = float(math.ceil(math.log2(max(n, 2)))) * ones
+        else:
+            steps = np.ceil(np.log(max(n, 2)) / np.log(np.maximum(r, 2)))
+        per_step = 14 if wl.variant == "pcr" else 9
+        work_n = n if wl.variant == "pcr" else 2 * n
+        out["flops"] = steps * work_n * per_step / np.maximum(np.log2(r), 1)
+        out["passes"] = ones.copy()
+        out["steps"] = steps
+        out["mixed_radix"] = (_mixed_radix_arr(tile_n, r)
+                              if wl.variant == "wm" else 0.0 * ones)
+    elif wl.op in ("fft", "large_fft"):
+        log_r = np.log(np.maximum(r, 2))
+        stages_total = np.log(max(n, 2)) / log_r
+        out["flops"] = 5.0 * n * math.log2(max(n, 2)) * ones
+        s = np.log(np.maximum(tile_n, 2)) / log_r
+        out["passes"] = np.maximum(1, np.ceil(stages_total / np.maximum(s, 1)))
+        out["steps"] = np.ceil(stages_total)
+        k = np.rint(np.log(tile_n) / np.log(r))
+        out["mixed_radix"] = np.where(np.power(r, k) == tile_n, 0.0, 1.0)
+    elif wl.op == "attention":
+        head_dim = 128
+        out["flops"] = 4.0 * n * head_dim * ones
+        out["passes"] = ones.copy()
+        out["steps"] = np.maximum(np.floor(n / cols.get("block_k", 128)), 1)
+    elif wl.op == "matmul":
+        out["flops"] = 2.0 * n * n * ones
+        out["passes"] = ones.copy()
+        out["steps"] = np.maximum(np.floor(n / cols.get("block_k", 128)), 1)
+    else:
+        out["flops"] = float(n) * ones
+        out["passes"] = ones.copy()
+        out["steps"] = ones.copy()
+    out.setdefault("mixed_radix", 0.0 * ones)
     return out
 
 
@@ -228,6 +387,92 @@ class TPUCostModelObjective(Objective):
                   "passes": passes, "flops": total_flops, "bytes": total_bytes},
         )
 
+    def signature(self) -> str:
+        return f"tpu_cost:{self.spec.name}:noise={self.noise}"
+
+    def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
+                   assume_valid: bool = False) -> np.ndarray:
+        """Vectorized fast path: the whole candidate set in array ops.
+
+        Mirrors ``__call__`` branch for branch; the only per-config Python
+        left is knob extraction (and the sha256 jitter when noise is on).
+        """
+        if not len(cfgs):
+            return np.empty(0, dtype=np.float64)
+        wl, spec = space.workload, self.spec
+        eb = effective_element_bytes(wl.op, wl.dtype)
+        cols = _KnobCols(cfgs)
+        work = _batch_work(wl, cfgs, cols)
+        batch = max(wl.batch, 1)
+        rows = cols.get("rows_per_program", 1)
+        tile_n = cols.get("tile_n", wl.n)
+        in_reg = cols.get("in_register", 0)
+
+        if wl.op == "attention":
+            block_q = cols.get("block_q", 128)
+            block_k = cols.get("block_k", 128)
+            grid = max(batch, 1) * np.maximum(np.floor(wl.n / block_q), 1)
+            block_bytes = (block_q + 2 * block_k) * 128 * eb
+            total_bytes = batch * wl.n * 128 * eb * 3.0 + 0.0 * grid
+            total_flops = batch * wl.n * work["flops"]
+            trailing = block_k
+        elif wl.op == "matmul":
+            bm = cols.get("block_m", 128)
+            bn = cols.get("block_n", 128)
+            bk = cols.get("block_k", 128)
+            grid = np.maximum(np.floor(batch / bm), 1) \
+                * np.maximum(np.floor(wl.n / bn), 1)
+            block_bytes = (bm * bk + bk * bn) * eb
+            total_bytes = (batch * wl.n + wl.n * wl.n) * eb + 0.0 * grid
+            total_flops = batch * work["flops"]
+            trailing = bn
+        else:
+            grid = np.maximum(np.floor(batch / rows), 1) \
+                * np.maximum(np.floor(wl.n / tile_n), 1)
+            block_bytes = rows * tile_n * eb
+            total_bytes = 2.0 * batch * wl.n * eb * work["passes"]
+            total_flops = batch * work["flops"]
+            trailing = np.where(in_reg, tile_n,
+                                np.minimum(tile_n, spec.lane_count * 8))
+
+        with np.errstate(all="ignore"):
+            t_mem = total_bytes / (spec.hbm_bandwidth
+                                   * dma_efficiency_arr(block_bytes, spec))
+            if wl.op in ("matmul", "attention"):
+                peak = spec.peak_bf16_flops if wl.dtype == "bfloat16" \
+                    else spec.peak_f32_flops
+                mxu_util = np.minimum(trailing / spec.mxu_dim, 1.0)
+                t_comp = total_flops / (peak * np.maximum(mxu_util, 1e-3))
+            else:
+                util = lane_utilization_arr(trailing, spec)
+                sub = sublane_utilization_arr(
+                    rows * np.maximum(np.floor(tile_n / spec.lane_count), 1),
+                    spec)
+                eff = np.maximum(util * np.maximum(sub, 0.25)
+                                 * ilp_factor_arr(cols.get("unroll", 1)),
+                                 1e-3)
+                t_comp = total_flops / (spec.peak_vpu_flops * eff)
+                t_comp = np.where(in_reg, t_comp * 0.8,
+                                  t_comp * (1.0 + 0.05 * work["steps"]))
+
+            overlap = np.where(grid >= 4, 1.0, np.where(grid >= 2, 0.85, 0.55))
+            t_body = np.maximum(t_comp, t_mem) / overlap \
+                + (1.0 - overlap) * np.minimum(t_comp, t_mem) * 0.1
+            passes = work["passes"]
+            t = passes * (spec.kernel_launch_s + t_body / passes
+                          + work["steps"] / passes * spec.pass_sync_s)
+            t = t * (1.0 + 0.25 * work["mixed_radix"])
+            if self.noise:
+                t = t * np.array([self._jitter(wl, c) for c in cfgs])
+
+        t = np.nan_to_num(t, nan=PENALTY_TIME, posinf=PENALTY_TIME,
+                          neginf=PENALTY_TIME)
+        if not assume_valid:
+            valid = np.fromiter((space.is_valid(c) for c in cfgs),
+                                dtype=bool, count=len(cfgs))
+            t = np.where(valid, t, PENALTY_TIME)
+        return t
+
 
 class CachedObjective(Objective):
     """Memoizes measurements — searches may revisit configs."""
@@ -243,3 +488,46 @@ class CachedObjective(Objective):
             self.cache[key] = self.inner(space, cfg)
             self.evaluations += 1
         return self.cache[key]
+
+    def signature(self) -> str:
+        return self.inner.signature()
+
+    def seed(self, space: SearchSpace,
+             history: Sequence[tuple]) -> None:
+        """Pre-load (config, time) pairs as cached measurements.
+
+        Used by consumers that obtained times outside this cache — e.g. a
+        journal-resumed sweep — and need later scalar calls to answer from
+        those exact numbers instead of re-measuring (`evaluations` is not
+        incremented; nothing fresh was run).
+        """
+        wl_key = space.workload.key
+        for cfg, t in history:
+            key = f"{wl_key}|{tuple(sorted(cfg.items()))}"
+            if key not in self.cache:
+                t = float(t)
+                self.cache[key] = Measurement(t, t != PENALTY_TIME)
+
+    def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
+                   assume_valid: bool = False) -> np.ndarray:
+        wl_key = space.workload.key
+        keys = [f"{wl_key}|{tuple(sorted(c.items()))}" for c in cfgs]
+        fresh = [i for i, k in enumerate(keys) if k not in self.cache]
+        if fresh:
+            times = self.inner.batch_eval(
+                space, [cfgs[i] for i in fresh], assume_valid=assume_valid)
+            for i, t in zip(fresh, times):
+                t = float(t)
+                # in the times-array protocol the exact penalty clamp marks
+                # a failed/invalid measurement (batch_eval never clamps a
+                # valid config — a genuinely valid one may model slower than
+                # 60 s and must stay valid). assume_valid skips the SPACE
+                # validity re-check only; it cannot vouch for measurement
+                # validity (wallclock timeouts, OOM penalties).
+                self.cache[keys[i]] = Measurement(t, t != PENALTY_TIME)
+            self.evaluations += len(fresh)
+        out = np.empty(len(cfgs), dtype=np.float64)
+        for i, k in enumerate(keys):
+            m = self.cache[k]
+            out[i] = m.time_s if m.valid else PENALTY_TIME
+        return out

@@ -84,6 +84,11 @@ class SearchSpace:
     params: Sequence[ParamSpec]
     constraints: Sequence[Callable[[Config, Workload], bool]] = ()
     spec: TpuSpec = V5E
+    # memoized enumerate_valid(): every consumer (sweep, analytical rank,
+    # strategies, featurizer) re-enumerates the same space; the constraint
+    # closures are the expensive part, not the product itself
+    _valid_cache: Optional[List[Config]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def param(self, name: str) -> ParamSpec:
         for p in self.params:
@@ -105,7 +110,12 @@ class SearchSpace:
         return out
 
     def enumerate_valid(self) -> List[Config]:
-        return [c for c in self.enumerate_all() if self.is_valid(c)]
+        if self._valid_cache is None:
+            self._valid_cache = [c for c in self.enumerate_all()
+                                 if self.is_valid(c)]
+        # fresh list each call — callers sort/slice it (the config dicts
+        # themselves are treated read-only everywhere)
+        return list(self._valid_cache)
 
     # --- encoding for the GP surrogate: log2-normalized coordinates ---
     def encode(self, cfg: Config) -> List[float]:

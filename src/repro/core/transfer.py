@@ -107,8 +107,9 @@ class TransferBayesianTuner:
             ys = list(np.log(np.array(list(evaluated.values()))))
             xs_all = np.array(xs_prior + [np.array(x) for x in xs]) \
                 if xs_prior else np.array(xs)
-            ys_all = np.array(ys_prior and list(np.log(np.array(ys_prior)))
-                              or []).tolist() + ys
+            ys_log_prior = [float(v) for v in np.log(np.asarray(ys_prior))] \
+                if ys_prior else []
+            ys_all = ys_log_prior + ys
             gp = GP(lengthscale=0.5).fit(np.asarray(xs_all, float),
                                          np.asarray(ys_all, float))
             remaining = [i for i in range(len(candidates))
@@ -122,6 +123,11 @@ class TransferBayesianTuner:
                 since = 0
             else:
                 since += 1
+        else:
+            # same semantics as BayesianTuner: "max_evals" when the budget
+            # bound, "exhausted" only when the space truly ran out
+            stopped = "max_evals" if len(evaluated) >= self.max_evals \
+                else "exhausted"
         return TuneResult(candidates[best_idx], best_t, len(evaluated),
                           history, stopped)
 

@@ -1,0 +1,10 @@
+"""repro.evaluation — cross-methodology evaluation harnesses.
+
+``repro.evaluation.compare`` reproduces the paper's Table-II-style
+comparison: every tuning methodology scored against the exhaustive
+optimum (Phi, mean slowdown, evaluation counts).
+"""
+from repro.evaluation.compare import (check_report, compare_methods,
+                                      format_report)
+
+__all__ = ["check_report", "compare_methods", "format_report"]

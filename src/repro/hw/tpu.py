@@ -111,3 +111,51 @@ def ilp_factor(unroll: int) -> float:
     import math
 
     return min(1.0, 0.55 + 0.15 * math.log2(max(unroll, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized counterparts (numpy arrays in, arrays out)
+# ---------------------------------------------------------------------------
+# The sweep engine evaluates whole candidate sets in a handful of array ops;
+# these mirror the scalar functions above element-for-element so batched and
+# per-config evaluation agree to floating-point identity.
+
+def lane_utilization_arr(trailing_dim, spec: TpuSpec = V5E):
+    import numpy as np
+
+    t = np.asarray(trailing_dim, dtype=np.float64)
+    lanes = float(spec.lane_count)
+    full = np.floor(t / lanes)
+    rem = t - full * lanes
+    tiles = full + (rem > 0)
+    multi = t / np.maximum(tiles * lanes, 1.0)
+    out = np.where(t >= lanes, multi, t / lanes)
+    return np.where(t <= 0, 0.0, out)
+
+
+def sublane_utilization_arr(second_dim, spec: TpuSpec = V5E):
+    import numpy as np
+
+    s = np.asarray(second_dim, dtype=np.float64)
+    sub = float(spec.sublane_count)
+    full = np.floor(s / sub)
+    rem = s - full * sub
+    tiles = full + (rem > 0)
+    multi = s / np.maximum(tiles * sub, 1.0)
+    out = np.where(s >= sub, multi, s / sub)
+    return np.where(s <= 0, 0.0, out)
+
+
+def dma_efficiency_arr(block_bytes, spec: TpuSpec = V5E):
+    import numpy as np
+
+    b = np.trunc(np.asarray(block_bytes, dtype=np.float64))
+    b_half = 64 * 2**10
+    return b / (b + b_half)
+
+
+def ilp_factor_arr(unroll):
+    import numpy as np
+
+    u = np.maximum(np.asarray(unroll, dtype=np.float64), 1.0)
+    return np.minimum(1.0, 0.55 + 0.15 * np.log2(u))

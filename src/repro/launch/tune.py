@@ -20,6 +20,15 @@ records in as extra training rows).  ``eval-model`` reports top-1 config
 match rate and predicted-vs-best slowdown against the exhaustive optimum
 on held-out problem sizes, exiting non-zero when the pinned floors are
 violated (the CI regression gate for the learned strategy).
+
+Methodology comparison (the paper's Table II as a CI artifact):
+
+  PYTHONPATH=src python -m repro.launch.tune compare-methods \
+      --json BENCH_methods.json [--model artifacts/ml_model.npz]
+
+runs analytical/ml/bayesian/random against the exhaustive optimum on the
+holdout suite and exits non-zero if exhaustive is ever beaten (Phi > 1 is
+a sweep/objective bug, not a better methodology).
 """
 from __future__ import annotations
 
@@ -71,6 +80,10 @@ def train_model_main(argv: List[str]) -> int:
     ap.add_argument("--depth", type=int, default=12)
     ap.add_argument("--noise", type=float, default=0.0,
                     help="cost-model jitter while sweeping (default off)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="checkpoint the exhaustive sweeps as JSONL journals "
+                         "here; an interrupted train-model rerun resumes "
+                         "instead of re-evaluating (see docs/tuning.md)")
     args = ap.parse_args(argv)
 
     import numpy as np
@@ -97,7 +110,8 @@ def train_model_main(argv: List[str]) -> int:
             i = int(np.argmin(times))
             db.store(wl, cfgs[i], float(times[i]), "exhaustive", len(cfgs))
 
-    ds = build_dataset(workloads, objective, on_sweep=on_sweep)
+    ds = build_dataset(workloads, objective, on_sweep=on_sweep,
+                       journal_dir=args.journal_dir)
     if prior is not None and len(prior):
         print(f"[train-model] +{len(prior)} rows from TuningDB {args.db}",
               flush=True)
@@ -114,6 +128,63 @@ def train_model_main(argv: List[str]) -> int:
         print(f"[train-model]   {op}: {rows} rows")
     print(f"[train-model] saved {path}")
     return 0
+
+
+def compare_methods_main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(prog="tune compare-methods",
+                                 description="Score every methodology "
+                                             "against the exhaustive optimum")
+    ap.add_argument("--json", default="BENCH_methods.json",
+                    help="report artifact path (default BENCH_methods.json)")
+    ap.add_argument("--ops", default=None,
+                    help="comma list of ops (default: the full suite)")
+    ap.add_argument("--split", default="holdout", choices=("train", "holdout"),
+                    help="which suite split to score (default holdout)")
+    ap.add_argument("--methods", default=",".join(
+                        ("analytical", "ml", "bayesian", "random")),
+                    help="comma list of strategies to compare")
+    ap.add_argument("--model", default=None,
+                    help="ML model artifact for strategy='ml' (sets "
+                         "$REPRO_ML_MODEL; default: the session default)")
+    ap.add_argument("--max-evals", type=int, default=20,
+                    help="per-workload budget for the search strategies")
+    ap.add_argument("--noise", type=float, default=0.0,
+                    help="cost-model jitter (deterministic, hash-seeded)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="checkpoint/resume the exhaustive sweeps here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import os
+
+    from repro.evaluation import check_report, compare_methods, format_report
+    from repro.tuning.ml import suite_workloads
+
+    if args.model:
+        os.environ["REPRO_ML_MODEL"] = args.model
+    try:
+        workloads = suite_workloads(args.split, ops=_parse_ops(args.ops))
+    except ValueError as e:
+        ap.error(str(e))
+    methods = tuple(m for m in args.methods.split(",") if m)
+    print(f"[compare-methods] {len(workloads)} {args.split} workloads x "
+          f"{len(methods)} methodologies ...", flush=True)
+    report = compare_methods(
+        workloads, methods,
+        objective_factory=lambda: TPUCostModelObjective(noise=args.noise),
+        seed=args.seed, max_evals=args.max_evals,
+        journal_dir=args.journal_dir)
+    report["suite"] = {"split": args.split, "seed": args.seed,
+                       "noise": args.noise, "max_evals": args.max_evals}
+    print(format_report(report))
+    with open(args.json, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"[compare-methods] report written to {args.json}")
+
+    failures = check_report(report)
+    for failure in failures:
+        print(f"[compare-methods] FAIL: {failure}", file=sys.stderr)
+    return 1 if failures else 0
 
 
 def eval_model_main(argv: List[str]) -> int:
@@ -186,6 +257,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return train_model_main(argv[1:])
     if argv and argv[0] == "eval-model":
         return eval_model_main(argv[1:])
+    if argv and argv[0] == "compare-methods":
+        return compare_methods_main(argv[1:])
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--op", default=None)

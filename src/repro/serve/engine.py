@@ -48,10 +48,15 @@ class ServeEngine:
 
     # -- public API --
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            # an empty prompt has no last token to decode from: _admit would
+            # set slot_pos = -1 and _decode_step would IndexError on
+            # prompt[-1]; reject at the door instead of crashing the batch
+            raise ValueError("empty prompt: need at least one token")
         rid = len(self.queue) + len(self.completed) + sum(
             r is not None for r in self.slot_req)
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        self.queue.append(Request(rid, prompt, max_new_tokens))
         return rid
 
     def run(self, max_steps: int = 1000) -> List[Request]:
@@ -65,13 +70,23 @@ class ServeEngine:
     # -- internals --
     def _admit(self) -> None:
         for slot in range(self.max_batch):
-            if self.slot_req[slot] is None and self.queue:
+            if self.slot_req[slot] is not None:
+                continue
+            while self.queue:
                 req = self.queue.pop(0)
+                if np.asarray(req.prompt).size == 0:
+                    # hand-built Request bypassing submit(): complete it
+                    # empty rather than poisoning the whole batch with
+                    # slot_pos = -1 and an IndexError on prompt[-1]
+                    req.done = True
+                    self.completed.append(req)
+                    continue
                 self.slot_req[slot] = req
                 # replay prompt through decode to build this slot's cache
                 for t, tok in enumerate(req.prompt[:-1]):
                     self._step_slot(slot, int(tok), t)
                 self.slot_pos[slot] = len(req.prompt) - 1
+                break
 
     def _step_slot(self, slot: int, token: int, pos: int) -> int:
         """Single-slot step executed via the batched decode fn (other slots

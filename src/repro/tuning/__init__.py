@@ -31,6 +31,8 @@ from repro.tuning.registry import (KernelSpec, get_kernel, normalizer_for,
 from repro.tuning.session import (TunerSession, default_session, get_strategy,
                                   register_strategy, set_default_session,
                                   strategies)
+from repro.tuning.sweep import (SweepJournal, SweepResult, config_key,
+                                journal_path, prune_candidates, run_sweep)
 
 
 def resolve(wl: Workload, *, config: Optional[Mapping[str, int]] = None,
@@ -50,11 +52,13 @@ def suggest(wl: Workload) -> Config:
 
 
 __all__ = [
-    "Config", "DEFAULT_DB_PATH", "KernelSpec", "SCHEMA_VERSION", "TuneResult",
+    "Config", "DEFAULT_DB_PATH", "KernelSpec", "SCHEMA_VERSION",
+    "SweepJournal", "SweepResult", "TuneResult",
     "TunerSession", "TuningDB", "Workload", "active_overrides", "build_space",
-    "default_session", "fit_block", "get_kernel", "get_strategy",
-    "normalize_config",
+    "config_key", "default_session", "fit_block", "get_kernel",
+    "get_strategy", "journal_path", "normalize_config",
     "normalizer_for", "on_cpu", "overrides", "overrides_active",
-    "plan_execution", "register_strategy", "registered_kernels", "resolve",
+    "plan_execution", "prune_candidates", "register_strategy",
+    "registered_kernels", "resolve", "run_sweep",
     "set_default_session", "strategies", "suggest", "tune", "tuned_kernel",
 ]

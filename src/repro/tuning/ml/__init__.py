@@ -15,6 +15,8 @@ forest exists or tree disagreement is high.
 See docs/tuning.md ("ML-based tuning") for the full lifecycle.
 """
 from repro.tuning.ml.dataset import (Dataset, build_dataset, dataset_from_db,
+                                     dataset_from_journal,
+                                     dataset_from_journal_dir,
                                      merge, parse_db_key, split_by_size,
                                      suite_workloads, sweep_workload, SUITE)
 from repro.tuning.ml.evaluate import check_floors, evaluate_model
@@ -29,7 +31,8 @@ __all__ = [
     "Dataset", "DEFAULT_MODEL_PATH", "FEATURE_NAMES", "FEATURE_VERSION",
     "Forest", "MLStrategy", "MODEL_SCHEMA", "ModelArtifactError",
     "ModelBundle", "N_FEATURES", "SUITE", "build_dataset", "check_floors",
-    "dataset_from_db", "default_model_path", "default_strategy",
+    "dataset_from_db", "dataset_from_journal", "dataset_from_journal_dir",
+    "default_model_path", "default_strategy",
     "evaluate_model", "featurize",
     "featurize_batch", "merge", "parse_db_key", "split_by_size",
     "suite_workloads", "sweep_workload", "train_bundle",

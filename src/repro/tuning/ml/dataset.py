@@ -31,6 +31,7 @@ from repro.core.objective import Objective, TPUCostModelObjective
 from repro.core.space import Config, Workload, build_space
 from repro.tuning.db import TuningDB
 from repro.tuning.ml.features import N_FEATURES, featurize_batch
+from repro.tuning.sweep import SweepJournal, config_key, run_sweep
 
 # ---------------------------------------------------------------------------
 # Default suite: per-op train / holdout problem sizes (paper Table I sizes)
@@ -158,42 +159,125 @@ class _Builder:
 # Sources
 # ---------------------------------------------------------------------------
 
-def sweep_workload(wl: Workload, objective: Optional[Objective] = None
+def sweep_workload(wl: Workload, objective: Optional[Objective] = None,
+                   journal_dir: Optional[str] = None
                    ) -> Tuple[List[Config], np.ndarray, np.ndarray]:
     """Exhaustively evaluate ``wl``'s valid space on the offline objective.
 
     Returns (configs, feature rows, times). This is the dense ground truth:
     identical to what ``ExhaustiveSearch`` visits, kept as arrays instead
     of a ``TuneResult`` so every (config, time) pair becomes a training row
-    rather than just the winner.
+    rather than just the winner.  Runs on the vectorized sweep engine;
+    with ``journal_dir`` the sweep checkpoints to (and resumes from) the
+    per-(workload, objective) journal.
     """
     objective = objective or TPUCostModelObjective()
     wl = wl.canonical()
     space = build_space(wl)
-    cfgs = space.enumerate_valid()
+    journal = SweepJournal.for_workload(journal_dir, wl, objective) \
+        if journal_dir else None
+    res = run_sweep(space, objective, journal=journal)
+    cfgs = [c for c, _ in res.history]
+    times = np.array([t for _, t in res.history])
     X = featurize_batch(space, cfgs)
-    times = np.array([objective(space, c).time_s for c in cfgs])
     return cfgs, X, times
 
 
 def build_dataset(workloads: Iterable[Workload],
                   objective: Optional[Objective] = None,
-                  on_sweep: Optional[Callable] = None) -> Dataset:
+                  on_sweep: Optional[Callable] = None,
+                  journal_dir: Optional[str] = None) -> Dataset:
     """Sweep every workload; one centered group per workload.
 
     ``on_sweep(wl, cfgs, times)`` is invoked once per workload with the
     sweep results, so callers (e.g. ``tune.py train-model --db``) can
     persist each exhaustive winner without sweeping a second time.
+    ``journal_dir`` checkpoints every sweep (see ``repro.tuning.sweep``),
+    making a long dataset build resumable.
     """
     objective = objective or TPUCostModelObjective()
     b = _Builder()
     for wl in workloads:
         wl = wl.canonical()
-        cfgs, X, times = sweep_workload(wl, objective)
+        cfgs, X, times = sweep_workload(wl, objective,
+                                        journal_dir=journal_dir)
         b.add_group(wl, X, times)
         if on_sweep is not None:
             on_sweep(wl, cfgs, times)
     return b.build()
+
+
+def dataset_from_journal(path: str,
+                         signature: Optional[str] = None) -> Dataset:
+    """One journal file -> one labeled group (no re-evaluation).
+
+    The journal header carries the workload; every completed entry whose
+    config is still valid in the current space becomes a training row.
+    ``signature`` (an ``Objective.signature()`` string) skips journals
+    measured under a different objective — mixing, say, noisy and
+    noiseless sweeps of one workload would produce conflicting labels.
+    Journals from *interrupted* sweeps load too — the group is centered on
+    the best time present, which is only a lower bound, but ``run_sweep``
+    will finish them on the next resume.  Journals a *pruned* sweep
+    started are skipped until some run completes the full space: a pruned
+    subset's winner is permanently unguaranteed, and label 0.0 means
+    "this IS the group optimum" (same exclusion the DB path applies to
+    ``exhaustive-pruned`` records).
+    """
+    b = _Builder()
+    journal = SweepJournal(path)
+    header = journal.read_header()
+    if header is None or "workload" not in header:
+        return b.build()
+    if signature is not None and header.get("objective") != signature:
+        return b.build()
+    raw_entries = journal.entries()
+    if header.get("pruned") and len(raw_entries) < header.get("space_size",
+                                                              float("inf")):
+        return b.build()
+    w = header["workload"]
+    try:
+        wl = Workload(op=w["op"], n=int(w["n"]), batch=int(w["batch"]),
+                      dtype=w.get("dtype", "float32"),
+                      variant=w.get("variant", "")).canonical()
+        space = build_space(wl)
+    except (KeyError, ValueError):
+        return b.build()
+    # featurize over the FULL valid set and select the measured rows: the
+    # space-context columns (rank percentiles etc.) are defined relative to
+    # every candidate in the space, and must match what sweep_workload
+    # produced at training time and MLStrategy computes at predict time —
+    # ranking a partial journal's subset against itself would give the same
+    # config a different feature vector
+    all_cfgs = space.enumerate_valid()
+    index = {config_key(c): i for i, c in enumerate(all_cfgs)}
+    rows, times = [], []
+    for cfg, t in raw_entries:
+        i = index.get(config_key(cfg))
+        if i is not None:              # skips configs no longer enumerated
+            rows.append(i)
+            times.append(t)
+    if rows:
+        b.add_group(wl, featurize_batch(space, all_cfgs)[rows], times)
+    return b.build()
+
+
+def dataset_from_journal_dir(journal_dir: str,
+                             objective: Optional[Objective] = None
+                             ) -> Dataset:
+    """Every ``*.jsonl`` sweep journal under ``journal_dir``, merged.
+
+    Pass the ``objective`` the sweeps were measured with to load only its
+    journals — a directory that accumulated sweeps under several
+    objectives (different noise, different cost models) would otherwise
+    contribute duplicate groups of one workload with inconsistent times.
+    """
+    import glob
+    import os
+    signature = objective.signature() if objective is not None else None
+    parts = [dataset_from_journal(p, signature=signature) for p in
+             sorted(glob.glob(os.path.join(journal_dir, "*.jsonl")))]
+    return merge(*parts) if parts else _Builder().build()
 
 
 def parse_db_key(key: str) -> Optional[Workload]:

@@ -25,6 +25,7 @@ kernel entry points and the legacy ``get_config`` shim use.
 """
 from __future__ import annotations
 
+import inspect
 import threading
 from collections import OrderedDict
 from typing import Callable, Dict, Mapping, Optional, Tuple
@@ -42,31 +43,40 @@ from repro.tuning.registry import normalizer_for
 # ---------------------------------------------------------------------------
 # Strategy registry
 # ---------------------------------------------------------------------------
-# A strategy maps (space, objective, seed, max_evals) -> TuneResult. New
-# search methods plug in via register_strategy without touching the session.
+# A strategy maps (space, objective, seed, max_evals, **sweep_kwargs) ->
+# TuneResult. New search methods plug in via register_strategy without
+# touching the session. Every strategy accepts (and may ignore) the sweep
+# plumbing kwargs — journal_dir / prune / top_k — so the session can
+# forward them uniformly.
 
 Strategy = Callable[..., TuneResult]
 
 
-def _bayesian(space, objective, *, seed: int = 0, max_evals: int = 64) -> TuneResult:
+def _bayesian(space, objective, *, seed: int = 0, max_evals: int = 64,
+              **_sweep) -> TuneResult:
     return BayesianTuner(seed=seed, max_evals=max_evals).tune(space, objective)
 
 
-def _exhaustive(space, objective, *, seed: int = 0, max_evals: int = 0) -> TuneResult:
-    return ExhaustiveSearch().tune(space, objective)
+def _exhaustive(space, objective, *, seed: int = 0, max_evals: int = 0,
+                journal_dir=None, prune=None, top_k=None) -> TuneResult:
+    return ExhaustiveSearch(journal_dir=journal_dir, prune=prune,
+                            top_k=top_k).tune(space, objective)
 
 
-def _random(space, objective, *, seed: int = 0, max_evals: int = 64) -> TuneResult:
+def _random(space, objective, *, seed: int = 0, max_evals: int = 64,
+            **_sweep) -> TuneResult:
     return RandomSearch(max_evals=max_evals, seed=seed).tune(space, objective)
 
 
-def _analytical(space, objective, *, seed: int = 0, max_evals: int = 0) -> TuneResult:
+def _analytical(space, objective, *, seed: int = 0, max_evals: int = 0,
+                **_sweep) -> TuneResult:
     cfg = AnalyticalTuner().suggest(space)
     m = objective(space, cfg)
     return TuneResult(cfg, m.time_s, 0, [(cfg, m.time_s)], "analytical")
 
 
-def _ml(space, objective, *, seed: int = 0, max_evals: int = 0) -> TuneResult:
+def _ml(space, objective, *, seed: int = 0, max_evals: int = 0,
+        **_sweep) -> TuneResult:
     # lazy import: the forest/feature stack only loads when strategy="ml" is
     # actually used. Resolution ladder: ml -> analytical -> default (see
     # repro.tuning.ml.strategy — the fallback is inside MLStrategy, so this
@@ -114,11 +124,13 @@ class TunerSession:
 
     def __init__(self, db: Optional[TuningDB] = None, *,
                  db_path: Optional[str] = None, platform: str = "tpu_v5e",
-                 spec: TpuSpec = V5E, cache_size: int = 2048):
+                 spec: TpuSpec = V5E, cache_size: int = 2048,
+                 sweep_dir: Optional[str] = None):
         self.db = db if db is not None else TuningDB(path=db_path,
                                                      platform=platform)
         self.platform = self.db.platform
         self.spec = spec
+        self.sweep_dir = sweep_dir   # journal directory for exhaustive sweeps
         self.cache_size = max(int(cache_size), 1)
         self._analytical = AnalyticalTuner()
         self._lock = threading.RLock()
@@ -182,16 +194,37 @@ class TunerSession:
 
     def tune(self, wl: Workload, method: str = "bayesian",
              objective: Optional[Objective] = None, *, seed: int = 0,
-             max_evals: int = 64, store: bool = True) -> TuneResult:
-        """Run an offline search; persist the winner; invalidate the caches."""
+             max_evals: int = 64, store: bool = True,
+             prune: Optional[str] = None,
+             top_k: Optional[int] = None) -> TuneResult:
+        """Run an offline search; persist the winner; invalidate the caches.
+
+        Exhaustive searches journal to ``self.sweep_dir`` (when set), so
+        interrupted sweeps resume, and honour ``prune``/``top_k``
+        (analytical-dominance pruning); other strategies ignore both.
+        """
         wl = wl.canonical()
         strategy = get_strategy(method)
         space = build_space(wl)
         cached = CachedObjective(objective or TPUCostModelObjective())
-        result = strategy(space, cached, seed=seed, max_evals=max_evals)
+        extra = {"journal_dir": self.sweep_dir, "prune": prune,
+                 "top_k": top_k}
+        try:     # strategies registered before the sweep kwargs existed
+            params = inspect.signature(strategy).parameters
+            if not any(p.kind is p.VAR_KEYWORD for p in params.values()):
+                extra = {k: v for k, v in extra.items() if k in params}
+        except (TypeError, ValueError):
+            pass
+        result = strategy(space, cached, seed=seed, max_evals=max_evals,
+                          **extra)
         if store:
-            self.db.store(wl, result.best_config, result.best_time, method,
-                          result.evaluations)
+            # a pruned sweep's winner is NOT a guaranteed optimum; don't
+            # store it under the method name dataset_from_db trusts for
+            # label-0.0 ("this is the group best") training rows
+            stored_method = f"{method}-pruned" \
+                if result.stopped_by == "pruned" else method
+            self.db.store(wl, result.best_config, result.best_time,
+                          stored_method, result.evaluations)
             self.invalidate(wl)
         return result
 

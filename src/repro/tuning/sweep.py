@@ -1,0 +1,329 @@
+"""Vectorized, resumable exhaustive sweeps (the Phi-denominator engine).
+
+Exhaustive search is the load-bearing wall of the paper's evaluation: it
+supplies the optimum every other methodology is scored against, and the
+dense (config, time) pairs the ML predictor trains on.  This module
+replaces the seed's serial per-config Python loop with:
+
+  * **batched evaluation** — the whole candidate set goes through
+    ``Objective.batch_eval`` (a handful of numpy array ops on the cost
+    model) instead of thousands of Python calls;
+  * **a resumable journal** — one JSONL file per (workload, objective)
+    with atomic line appends, so a long wall-clock sweep survives
+    interruption and a re-run only evaluates what is missing;
+  * **analytical-dominance pruning** — ``prune="analytical"`` keeps the
+    top-k candidates ranked by the zero-evaluation expert model (the
+    model-steered pruning lever of Schoonhoven et al.), recording how many
+    candidates were dropped.
+
+``run_sweep`` is what ``ExhaustiveSearch.tune`` (and therefore
+``strategy="exhaustive"``) executes; ``repro.tuning.ml.dataset`` consumes
+the same journals directly as training rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bayesian import TuneResult
+from repro.core.objective import Objective
+from repro.core.space import Config, SearchSpace, Workload
+
+JOURNAL_VERSION = 1
+
+# default kept-set size for prune="analytical"; expensive objectives can
+# pass an explicit top_k
+DEFAULT_TOP_K = 64
+
+
+def config_key(cfg: Config) -> str:
+    """Canonical, order-independent identity of a config inside one space."""
+    return ",".join(f"{k}={cfg[k]}" for k in sorted(cfg))
+
+
+def _safe(token: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.=-]+", "_", token)
+
+
+def journal_path(journal_dir: str, wl: Workload, objective: Objective) -> str:
+    """Per-(workload, objective) journal file inside ``journal_dir``."""
+    return os.path.join(journal_dir,
+                        f"{_safe(wl.key)}__{_safe(objective.signature())}.jsonl")
+
+
+class SweepJournal:
+    """Append-only JSONL checkpoint for one (workload, objective) sweep.
+
+    Line 1 is a header carrying the workload fields and the objective
+    signature; every subsequent line is one completed evaluation.  Appends
+    go through a single ``os.write`` on an ``O_APPEND`` descriptor per
+    chunk, so a killed sweep leaves at most one torn trailing line — which
+    ``load`` skips — and concurrent writers never interleave mid-line.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    @classmethod
+    def for_workload(cls, journal_dir: str, wl: Workload,
+                     objective: Objective) -> "SweepJournal":
+        os.makedirs(journal_dir, exist_ok=True)
+        return cls(journal_path(journal_dir, wl, objective))
+
+    # -- reading ------------------------------------------------------------
+
+    def load(self, wl: Optional[Workload] = None,
+             objective: Optional[Objective] = None) -> Dict[str, float]:
+        """Completed {config_key: time_s}; {} when the journal is absent.
+
+        When ``wl``/``objective`` are given, a header that does not match
+        raises — silently resuming someone else's numbers would corrupt
+        the optimum.
+        """
+        if not os.path.exists(self.path):
+            return {}
+        done: Dict[str, float] = {}
+        header_ok = False
+        with open(self.path, "r") as f:
+            for i, line in enumerate(f):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue     # torn trailing line from a killed run
+                if i == 0 and rec.get("kind") == "header":
+                    self._check_header(rec, wl, objective)
+                    header_ok = True
+                    continue
+                if "k" in rec and "t" in rec:
+                    done[rec["k"]] = float(rec["t"])
+        if not header_ok and (wl is not None or objective is not None):
+            # a torn/missing header means the entries cannot be validated
+            # against this (workload, objective) — never resume them.
+            # Quarantine the bytes and let the sweep start a fresh journal.
+            self._quarantine()
+            return {}
+        return done
+
+    def read_header(self) -> Optional[Dict]:
+        if not os.path.exists(self.path):
+            return None
+        with open(self.path, "r") as f:
+            first = f.readline().strip()
+        if not first:
+            return None
+        try:
+            rec = json.loads(first)
+        except json.JSONDecodeError:
+            return None
+        return rec if rec.get("kind") == "header" else None
+
+    def entries(self) -> List[Tuple[Config, float]]:
+        """Completed (config, time) pairs, first-completion order.
+
+        Deduplicated by config (last line wins, matching ``load``):
+        concurrent writers that both loaded before either appended can
+        legally write the same config twice.
+        """
+        if not os.path.exists(self.path):
+            return []
+        seen: Dict[str, int] = {}
+        out: List[Tuple[Config, float]] = []
+        with open(self.path, "r") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if rec.get("kind") == "header" or "cfg" not in rec:
+                    continue
+                cfg = {k: int(v) for k, v in rec["cfg"].items()}
+                key = config_key(cfg)
+                pair = (cfg, float(rec["t"]))
+                if key in seen:
+                    out[seen[key]] = pair
+                else:
+                    seen[key] = len(out)
+                    out.append(pair)
+        return out
+
+    @staticmethod
+    def _check_header(rec: Dict, wl: Optional[Workload],
+                      objective: Optional[Objective]) -> None:
+        if wl is not None and rec.get("workload", {}).get("key") != wl.key:
+            raise ValueError(
+                f"sweep journal is for workload "
+                f"{rec.get('workload', {}).get('key')!r}, not {wl.key!r}")
+        if objective is not None and rec.get("objective") != objective.signature():
+            raise ValueError(
+                f"sweep journal was measured with objective "
+                f"{rec.get('objective')!r}, not {objective.signature()!r}")
+
+    # -- writing ------------------------------------------------------------
+
+    def _quarantine(self) -> None:
+        """Set a corrupt journal aside (bytes preserved for post-mortem)."""
+        target = self.path + ".corrupt"
+        try:
+            os.replace(self.path, target)
+        except OSError:
+            os.unlink(self.path)
+
+    def _ensure_header(self, wl: Workload, objective: Objective,
+                       space_size: int, pruned: int = 0) -> None:
+        if os.path.exists(self.path) and os.path.getsize(self.path):
+            if self.read_header() is not None:
+                return
+            # non-empty but headerless (e.g. the very first os.write was
+            # torn): unusable — quarantine and re-journal from scratch
+            self._quarantine()
+        # space_size is the FULL valid-space size; a pruned sweep records
+        # how much it dropped so journal consumers (dataset export) can
+        # tell "complete enumeration" from "model-steered subset"
+        header = {"kind": "header", "version": JOURNAL_VERSION,
+                  "workload": {"key": wl.key, "op": wl.op, "n": wl.n,
+                               "batch": wl.batch, "dtype": wl.dtype,
+                               "variant": wl.variant},
+                  "objective": objective.signature(),
+                  "space_size": space_size,
+                  "pruned": int(pruned)}
+        self._append_lines([json.dumps(header, sort_keys=True)])
+
+    def append(self, wl: Workload, objective: Objective, space_size: int,
+               entries: Sequence[Tuple[Config, float]],
+               pruned: int = 0) -> None:
+        self._ensure_header(wl, objective, space_size, pruned)
+        self._append_lines(
+            json.dumps({"k": config_key(cfg), "cfg": cfg, "t": float(t)},
+                       sort_keys=True)
+            for cfg, t in entries)
+
+    def _append_lines(self, lines) -> None:
+        payload = "".join(line + "\n" for line in lines).encode()
+        if not payload:
+            return
+        fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, payload)
+        finally:
+            os.close(fd)
+
+
+# ---------------------------------------------------------------------------
+# Pruning
+# ---------------------------------------------------------------------------
+
+def prune_candidates(space: SearchSpace, cands: List[Config],
+                     top_k: int) -> Tuple[List[Config], int]:
+    """Keep the ``top_k`` analytically-ranked candidates, enumeration order.
+
+    The expert model ranks for free (no objective evaluations); measuring
+    only its favourites is the Prajapati-style "rank before you measure"
+    lever for objectives where every evaluation is minutes of wall clock.
+    """
+    if top_k >= len(cands):
+        return cands, 0
+    from repro.core.analytical import score
+    order = sorted(range(len(cands)),
+                   key=lambda i: score(space, cands[i]).key(), reverse=True)
+    kept_idx = sorted(order[:top_k])          # preserve enumeration order
+    return [cands[i] for i in kept_idx], len(cands) - top_k
+
+
+# ---------------------------------------------------------------------------
+# The sweep
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    best_config: Config
+    best_time: float
+    evaluations: int                     # fresh objective evaluations
+    resumed: int                         # configs answered by the journal
+    pruned: int                          # candidates dropped before measuring
+    total: int                           # candidates actually swept
+    history: List[Tuple[Config, float]]  # enumeration order, penalty-clamped
+    stopped_by: str                      # "exhausted" | "pruned"
+    journal: Optional[str] = None        # journal path, when journaled
+
+    def as_tune_result(self) -> TuneResult:
+        return TuneResult(self.best_config, self.best_time,
+                          self.evaluations + self.resumed, self.history,
+                          self.stopped_by)
+
+
+def run_sweep(space: SearchSpace, objective: Objective, *,
+              journal: Optional[SweepJournal] = None,
+              prune: Optional[str] = None, top_k: Optional[int] = None,
+              chunk: int = 1024) -> SweepResult:
+    """Evaluate the (optionally pruned) valid space; resume from ``journal``.
+
+    Evaluation happens in ``chunk``-sized batches through
+    ``objective.batch_eval``; each completed chunk is journaled before the
+    next starts, so an interrupted sweep re-run skips everything already
+    measured and still returns the identical winner.
+    """
+    wl = space.workload
+    cands = space.enumerate_valid()
+    if not cands:
+        raise ValueError(f"empty search space for {wl.key}")
+    full_size = len(cands)
+
+    pruned = 0
+    if prune is not None:
+        if prune != "analytical":
+            raise ValueError(f"unknown prune mode {prune!r}; "
+                             f"supported: 'analytical'")
+        if top_k is not None and top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        cands, pruned = prune_candidates(
+            space, cands, top_k if top_k is not None else DEFAULT_TOP_K)
+
+    times = np.full(len(cands), np.nan)
+    resumed = 0
+    if journal is not None:
+        done = journal.load(wl, objective)
+        pending: List[int] = []
+        for i, cand in enumerate(cands):
+            t = done.get(config_key(cand)) if done else None
+            if t is None:
+                pending.append(i)
+            else:
+                times[i] = t
+                resumed += 1
+    else:
+        pending = list(range(len(cands)))
+
+    chunk = max(int(chunk), 1)
+    for lo in range(0, len(pending), chunk):
+        idx = pending[lo: lo + chunk]
+        ts = objective.batch_eval(space, [cands[i] for i in idx],
+                                  assume_valid=True)
+        times[idx] = ts
+        if journal is not None:
+            journal.append(wl, objective, full_size,
+                           [(cands[i], float(t)) for i, t in zip(idx, ts)],
+                           pruned=pruned)
+
+    best_i = int(np.argmin(times))
+    return SweepResult(
+        best_config=cands[best_i],
+        best_time=float(times[best_i]),
+        evaluations=len(pending),
+        resumed=resumed,
+        pruned=pruned,
+        total=len(cands),
+        history=list(zip(cands, times.tolist())),
+        stopped_by="pruned" if pruned else "exhausted",
+        journal=journal.path if journal is not None else None,
+    )

@@ -1,5 +1,9 @@
 """Beyond-paper distributed-config tuning: space + objective plumbing."""
-from repro.core.distributed_tuning import distributed_space
+from repro.core.distributed_tuning import (CompiledRooflineObjective,
+                                           distributed_space,
+                                           micro_step_overhead_s,
+                                           step_time_from_record,
+                                           tune_distributed)
 
 
 def test_space_enumerable():
@@ -15,3 +19,90 @@ def test_serving_space_has_no_train_knobs():
     sp = distributed_space("gemma-2b", "decode_32k", is_train=False)
     for cfg in sp.enumerate_valid():
         assert cfg["micro_steps"] == 1 and cfg["remat"] == 1
+
+
+# ---------------------------------------------------------------------------
+# micro_steps objective regression (the dead `if False` branch made the
+# knob a no-op: the objective returned the same step time for every value)
+# ---------------------------------------------------------------------------
+
+GRAD_BYTES_DEV = 8 * 2**20     # ~0.5b params / 256 chips, f32 accumulator
+
+
+def _fake_record(micro_steps: int) -> dict:
+    # per-step bound mildly DECREASING in micro_steps (smaller activation
+    # working set): exactly the shape that made the broken objective pick
+    # the largest accumulation depth for free
+    t = 1.0e-3 * (1.0 - 4.0e-3 * micro_steps)
+    return {"status": "ok", "chips": 256,
+            "per_device": {"peak_bytes": 10 * 2**30},
+            "roofline": {"compute_s": t, "memory_s": t / 2,
+                         "collective_s": t / 4},
+            "dominant": "compute_s",
+            "step_time_bound_s": t}
+
+
+def test_micro_step_overhead_charges_accumulation():
+    assert micro_step_overhead_s(1, GRAD_BYTES_DEV) == 0.0
+    o2 = micro_step_overhead_s(2, GRAD_BYTES_DEV)
+    o8 = micro_step_overhead_s(8, GRAD_BYTES_DEV)
+    assert 0 < o2 < o8
+    # each extra micro step pays at least the grad-shard read-modify-write
+    assert o8 >= 7 * 2 * GRAD_BYTES_DEV / 819e9
+
+
+def test_micro_steps_changes_objective_time():
+    """Two micro_steps values must produce different objective times."""
+    base = {"sp": 0, "remat": 1, "moe_group": 1024}
+    rec2, rec8 = _fake_record(2), _fake_record(8)
+    t2 = step_time_from_record(rec2, dict(base, micro_steps=2),
+                               GRAD_BYTES_DEV)
+    t8 = step_time_from_record(rec8, dict(base, micro_steps=8),
+                               GRAD_BYTES_DEV)
+    assert t2 != t8
+    # and in the corrected direction: the accumulation overhead outweighs
+    # the small activation-footprint gain the raw bound shows
+    assert t8 > t2
+    assert rec8["step_time_bound_s"] < rec2["step_time_bound_s"]
+
+
+def test_fixed_objective_changes_tune_distributed_winner(monkeypatch):
+    """With the dead branch, tune_distributed ranked configs by the raw
+    per-step bound — argmin at micro_steps=8.  The fixed objective charges
+    the accumulation cost and flips the winner."""
+    import repro.launch.roofline as roofline
+
+    def fake_analyze_cell(arch, shape, multi_pod=False, arch_cfg=None,
+                          hp=None):
+        return _fake_record(hp.micro_steps if hp is not None else 1)
+
+    monkeypatch.setattr(roofline, "analyze_cell", fake_analyze_cell)
+    res = tune_distributed("qwen1.5-0.5b", "train_4k", method="exhaustive")
+
+    # what the broken objective optimized: raw step_time_bound_s
+    broken_winner_micro = max(
+        (1, 2, 4, 8), key=lambda m: -_fake_record(m)["step_time_bound_s"])
+    assert broken_winner_micro == 8
+    assert res.best_config["micro_steps"] != broken_winner_micro
+    assert res.best_config["micro_steps"] == 1
+
+    # the fixed objective really produced distinct times per micro_steps
+    times_by_micro = {}
+    for cfg, t in res.history:
+        times_by_micro.setdefault(cfg["micro_steps"], set()).add(round(t, 12))
+    assert len({min(v) for v in times_by_micro.values()}) == 4
+
+
+def test_hbm_guard_still_penalizes(monkeypatch):
+    import repro.launch.roofline as roofline
+
+    def oom_analyze_cell(arch, shape, multi_pod=False, arch_cfg=None,
+                         hp=None):
+        rec = _fake_record(hp.micro_steps if hp is not None else 1)
+        rec["per_device"]["peak_bytes"] = 32 * 2**30   # > 16 GiB HBM
+        return rec
+
+    monkeypatch.setattr(roofline, "analyze_cell", oom_analyze_cell)
+    sp = distributed_space("qwen1.5-0.5b", "train_4k")
+    m = CompiledRooflineObjective()(sp, sp.enumerate_valid()[0])
+    assert not m.valid and m.time_s > 60.0

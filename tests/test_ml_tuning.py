@@ -309,3 +309,105 @@ def test_evaluate_model_counts_fallbacks_against_ml_rate(tiny_bundle):
 
 def test_check_floors_empty_report():
     assert check_floors({"n_scored": 0}, min_top1=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Sweep-journal consumption (the dataset pipeline rides the sweep engine)
+# ---------------------------------------------------------------------------
+
+def test_sweep_workload_journals_and_resumes(tmp_path):
+    from repro.tuning.ml.dataset import sweep_workload
+
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    cfgs, X, times = sweep_workload(wl, TPUCostModelObjective(),
+                                    journal_dir=str(tmp_path))
+    assert len(cfgs) == len(times) == len(X)
+
+    class Boom(TPUCostModelObjective):
+        def batch_eval(self, *a, **kw):
+            raise AssertionError("journal was ignored: re-evaluated")
+
+        def signature(self):
+            return TPUCostModelObjective().signature()
+
+    cfgs2, X2, times2 = sweep_workload(wl, Boom(),
+                                       journal_dir=str(tmp_path))
+    assert cfgs2 == cfgs
+    assert np.array_equal(times, times2)
+    assert np.array_equal(X, X2)
+
+
+def test_dataset_from_journal_dir_matches_direct_build(tmp_path):
+    from repro.tuning.ml import build_dataset
+    from repro.tuning.ml.dataset import dataset_from_journal_dir
+
+    wls = [Workload(op="fft", n=256, batch=2**14, variant="stockham"),
+           Workload(op="tridiag", n=128, batch=2**13, variant="wm")]
+    direct = build_dataset(wls, TPUCostModelObjective(),
+                           journal_dir=str(tmp_path))
+    replayed = dataset_from_journal_dir(str(tmp_path))
+    assert len(replayed) == len(direct) > 0
+    assert sorted(replayed.keys) == sorted(direct.keys)
+    # group-centered labels: every journal group pins its winner at 0.0
+    for gid in range(len(replayed.keys)):
+        assert replayed.y[replayed.group == gid].min() == 0.0
+    # same rows, independent of file ordering
+    assert np.isclose(np.sort(replayed.y), np.sort(direct.y)).all()
+
+
+def test_dataset_from_journal_dir_filters_by_objective(tmp_path):
+    """Sweeps of one workload under different objectives must not merge
+    into duplicate groups with conflicting labels."""
+    from repro.tuning.ml.dataset import (dataset_from_journal_dir,
+                                         sweep_workload)
+
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    clean = TPUCostModelObjective()
+    noisy = TPUCostModelObjective(noise=0.1)
+    sweep_workload(wl, clean, journal_dir=str(tmp_path))
+    sweep_workload(wl, noisy, journal_dir=str(tmp_path))
+    assert len(list(tmp_path.glob("*.jsonl"))) == 2
+
+    only_clean = dataset_from_journal_dir(str(tmp_path), objective=clean)
+    assert len(only_clean.keys) == 1            # one group, one objective
+    unfiltered = dataset_from_journal_dir(str(tmp_path))
+    assert len(unfiltered.keys) == 2            # caller opted into both
+
+
+def test_partial_journal_features_match_full_space_context(tmp_path):
+    """Space-context rank features must be computed against the FULL valid
+    set even when the journal only holds part of a sweep — the same config
+    must featurize identically in training and at predict time."""
+    from repro.core.space import build_space
+    from repro.tuning.ml import featurize_batch
+    from repro.tuning.ml.dataset import dataset_from_journal
+    from repro.tuning.sweep import SweepJournal, config_key
+
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    space = build_space(wl)
+    obj = TPUCostModelObjective()
+    all_cfgs = space.enumerate_valid()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    partial = all_cfgs[: len(all_cfgs) // 3]
+    journal.append(wl, obj, len(all_cfgs),
+                   [(c, obj(space, c).time_s) for c in partial])
+    # duplicate appends (two concurrent writers): must not double rows
+    journal.append(wl, obj, len(all_cfgs),
+                   [(partial[0], obj(space, partial[0]).time_s)])
+
+    ds = dataset_from_journal(journal.path)
+    assert len(ds) == len(partial)                 # deduped
+    X_full = featurize_batch(space, all_cfgs)
+    index = {config_key(c): i for i, c in enumerate(all_cfgs)}
+    expect = X_full[[index[config_key(c)] for c in partial]]
+    assert np.array_equal(ds.X, expect)
+
+
+def test_dataset_from_journal_skips_garbage(tmp_path):
+    from repro.tuning.ml.dataset import dataset_from_journal
+
+    bad = tmp_path / "corrupt.jsonl"
+    bad.write_text("not json at all\n")
+    assert len(dataset_from_journal(str(bad))) == 0
+    missing = tmp_path / "nope.jsonl"
+    assert len(dataset_from_journal(str(missing))) == 0

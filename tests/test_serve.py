@@ -63,3 +63,55 @@ def test_greedy_matches_direct_decode(small_model):
         out.append(cur)
         pos += 1
     assert out == out_engine
+
+
+def test_empty_prompt_rejected(small_model):
+    """An empty prompt used to IndexError in _decode_step (prompt[-1]) and
+    poison slot_pos with -1; it must be rejected at submit."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, max_batch=2, max_len=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.asarray([], np.int32))
+    # the engine stays healthy for real traffic afterwards
+    eng.submit(np.asarray([3, 1], np.int32), max_new_tokens=2)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 2
+
+
+def test_handcrafted_empty_request_drained_not_crashing(small_model):
+    """A Request built around submit() must not crash the whole batch."""
+    from repro.serve.engine import Request
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, max_batch=2, max_len=64)
+    eng.queue.append(Request(0, np.asarray([], np.int32), 4))
+    eng.submit(np.asarray([5], np.int32), max_new_tokens=2)
+    done = eng.run()
+    assert len(done) == 2
+    empty = next(r for r in done if r.prompt.size == 0)
+    assert empty.done and empty.output == []
+    real = next(r for r in done if r.prompt.size == 1)
+    assert len(real.output) == 2
+
+
+def test_single_token_prompt(small_model):
+    """prompt[:-1] is empty for a 1-token prompt — no replay steps, decode
+    starts straight from the prompt token at position 0."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, max_batch=2, max_len=32)
+    eng.submit(np.asarray([7], np.int32), max_new_tokens=3)
+    done = eng.run()
+    assert len(done) == 1
+    assert len(done[0].output) == 3
+    assert all(0 <= t < cfg.vocab for t in done[0].output)
+
+    # greedy consistency against a direct decode loop
+    import jax.numpy as jnp
+    cache = model.init_cache(1, 32, dtype=jnp.float32)
+    out, cur, pos = [], 7, 0
+    for _ in range(3):
+        lg, cache = model.decode_step(params, jnp.asarray([[cur]]), cache,
+                                      jnp.asarray([[pos]]))
+        cur = int(jnp.argmax(lg[0, 0]))
+        out.append(cur)
+        pos += 1
+    assert out == done[0].output

@@ -1,0 +1,505 @@
+"""Sweep engine: batched objectives, journaled resume, pruning, compare."""
+import inspect
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (CachedObjective, ExhaustiveSearch, RandomSearch,
+                        TPUCostModelObjective, Workload, build_space)
+from repro.core.bayesian import BayesianTuner
+from repro.core.objective import PENALTY_TIME
+from repro.core.transfer import TransferBayesianTuner
+from repro.evaluation import check_report, compare_methods, format_report
+from repro.tuning import TunerSession, register_strategy
+from repro.tuning.session import _STRATEGIES
+from repro.tuning.sweep import SweepJournal, run_sweep
+
+SWEEP_WORKLOADS = [
+    Workload(op="scan", n=512, batch=2**17, variant="lf"),
+    Workload(op="scan", n=2048, batch=2**15, variant="ks"),
+    Workload(op="ssd", n=512, batch=2**17),
+    Workload(op="rglru", n=1024, batch=2**16),
+    Workload(op="tridiag", n=256, batch=2**14, variant="wm"),
+    Workload(op="tridiag", n=512, batch=2**14, variant="pcr"),
+    Workload(op="tridiag", n=512, batch=2**14, variant="cr"),
+    Workload(op="fft", n=1024, batch=2**12, variant="stockham"),
+    Workload(op="large_fft", n=2**20, batch=8, variant="stockham"),
+    Workload(op="attention", n=2048, batch=64, variant="flash"),
+    Workload(op="matmul", n=1024, batch=1024),
+]
+
+
+class _Counting(TPUCostModelObjective):
+    """Counts configs that reach the vectorized path."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.fresh = 0
+
+    def batch_eval(self, space, cfgs, **kw):
+        self.fresh += len(cfgs)
+        return super().batch_eval(space, cfgs, **kw)
+
+    def signature(self):
+        return TPUCostModelObjective(noise=self.noise).signature()
+
+
+class _Killed(_Counting):
+    """Dies mid-sweep after `after` evaluations, like a preempted job."""
+
+    def __init__(self, after, **kw):
+        super().__init__(**kw)
+        self.after = after
+
+    def batch_eval(self, space, cfgs, **kw):
+        if self.fresh >= self.after:
+            raise KeyboardInterrupt
+        return super().batch_eval(space, cfgs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Batched objective protocol
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wl", SWEEP_WORKLOADS, ids=lambda w: w.key)
+@pytest.mark.parametrize("noise", [0.0, 0.02])
+def test_batch_eval_matches_scalar(wl, noise):
+    """The vectorized fast path is bit-identical to per-config calls."""
+    obj = TPUCostModelObjective(noise=noise)
+    space = build_space(wl)
+    cands = space.enumerate_valid()
+    scalar = np.array([obj(space, c).time_s for c in cands])
+    batched = obj.batch_eval(space, cands, assume_valid=True)
+    assert np.array_equal(scalar, batched)
+
+
+def test_batch_eval_clamps_invalid():
+    space = build_space(Workload(op="scan", n=256, batch=2**18, variant="lf"))
+    good = space.enumerate_valid()[0]
+    bad = dict(good, tile_n=999)
+    times = TPUCostModelObjective().batch_eval(space, [good, bad])
+    assert times[0] < PENALTY_TIME and times[1] == PENALTY_TIME
+
+
+def test_batch_eval_heterogeneous_key_order():
+    """Mixed key orders must not be silently mis-columned by the fast path."""
+    space = build_space(Workload(op="scan", n=256, batch=2**18, variant="lf"))
+    obj = TPUCostModelObjective()
+    cands = space.enumerate_valid()[:6]
+    shuffled = dict(reversed(list(cands[1].items())))   # same config, new order
+    mixed = [cands[0], shuffled] + cands[2:]
+    scalar = np.array([obj(space, c).time_s for c in mixed])
+    assert np.array_equal(obj.batch_eval(space, mixed, assume_valid=True),
+                          scalar)
+
+
+def test_cached_objective_batch_keeps_slow_valid_configs():
+    """A valid config modeled slower than the penalty clamp must not be
+    cached as invalid (and clamped) by the batch path."""
+    wl = Workload(op="scan", n=2**22, batch=2**26, variant="lf")
+    space = build_space(wl)
+    slow = space.enumerate_valid()[0]
+    scalar_m = TPUCostModelObjective()(space, slow)
+    assert scalar_m.valid and scalar_m.time_s > PENALTY_TIME   # the premise
+    obj = CachedObjective(TPUCostModelObjective())
+    batched = obj.batch_eval(space, [slow], assume_valid=True)
+    assert batched[0] == scalar_m.time_s
+    cached_m = obj(space, slow)
+    assert cached_m.valid and cached_m.time_s == scalar_m.time_s
+
+
+def test_cached_objective_batch_counts_unique():
+    space = build_space(Workload(op="fft", n=256, batch=2**14,
+                                 variant="stockham"))
+    obj = CachedObjective(TPUCostModelObjective())
+    cands = space.enumerate_valid()
+    first = obj.batch_eval(space, cands, assume_valid=True)
+    assert obj.evaluations == len(cands)
+    again = obj.batch_eval(space, cands, assume_valid=True)
+    assert obj.evaluations == len(cands)          # all cache hits
+    assert np.array_equal(first, again)
+    # scalar calls agree with the batch-cached measurements
+    assert obj(space, cands[3]).time_s == first[3]
+
+
+# ---------------------------------------------------------------------------
+# The sweep: equivalence, journaled resume, pruning
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_seed_loop_semantics():
+    """Same winner, same history, as the seed per-config loop."""
+    wl = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    space = build_space(wl)
+    obj = TPUCostModelObjective(noise=0.02)
+    res = run_sweep(space, obj)
+    seed_hist = []
+    best_cfg, best_t = None, float("inf")
+    for cfg in space.enumerate_valid():
+        m = obj(space, cfg)
+        t = m.time_s if m.valid else PENALTY_TIME
+        seed_hist.append(t)
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    assert res.best_config == best_cfg and res.best_time == best_t
+    assert np.array_equal(np.asarray([t for _, t in res.history]),
+                          np.asarray(seed_hist))
+    assert res.stopped_by == "exhausted"
+    assert res.evaluations == res.total and res.resumed == 0
+
+
+def test_interrupted_sweep_resumes_without_reevaluating(tmp_path):
+    """Kill a journaled sweep mid-flight; the rerun must skip everything
+    already measured and return the identical winner (acceptance test)."""
+    wl = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    space = build_space(wl)
+    clean = run_sweep(space, TPUCostModelObjective(noise=0.02))
+
+    killed = _Killed(after=150, noise=0.02)
+    journal = SweepJournal.for_workload(str(tmp_path), wl, killed)
+    with pytest.raises(KeyboardInterrupt):
+        run_sweep(space, killed, journal=journal, chunk=64)
+    survived = journal.load(wl, killed)
+    assert 0 < len(survived) < clean.total
+
+    resumed_obj = _Counting(noise=0.02)
+    res = run_sweep(space, resumed_obj,
+                    journal=SweepJournal.for_workload(str(tmp_path), wl,
+                                                      resumed_obj))
+    assert resumed_obj.fresh == clean.total - len(survived)
+    assert res.resumed == len(survived)
+    assert res.evaluations == resumed_obj.fresh
+    assert res.best_config == clean.best_config
+    assert res.best_time == clean.best_time
+    assert [t for _, t in res.history] == [t for _, t in clean.history]
+
+    # a third run answers fully from the journal
+    idle = _Counting(noise=0.02)
+    res3 = run_sweep(space, idle,
+                     journal=SweepJournal.for_workload(str(tmp_path), wl,
+                                                       idle))
+    assert idle.fresh == 0 and res3.best_config == clean.best_config
+
+
+def test_journal_rejects_foreign_header(tmp_path):
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    other = Workload(op="fft", n=512, batch=2**14, variant="stockham")
+    obj = TPUCostModelObjective()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    run_sweep(build_space(wl), obj, journal=journal)
+    with pytest.raises(ValueError, match="workload"):
+        journal.load(other, obj)
+    with pytest.raises(ValueError, match="objective"):
+        journal.load(wl, TPUCostModelObjective(noise=0.5))
+
+
+def test_wallclock_signature_carries_runner_identity():
+    """Journals keyed by a bare class name would resume another kernel's
+    times; the runner (and measurement params) must be in the signature."""
+    from repro.core.objective import WallClockObjective
+
+    def runner_a(wl, cfg):
+        return lambda: None
+
+    def runner_b(wl, cfg):
+        return lambda: None
+
+    sig_a = WallClockObjective(runner_a).signature()
+    sig_b = WallClockObjective(runner_b).signature()
+    assert sig_a != sig_b
+    assert WallClockObjective(runner_a, reps=9).signature() != sig_a
+
+
+def test_headerless_journal_quarantined_not_resumed(tmp_path):
+    """A torn/missing header leaves entries unvalidatable: they must never
+    be resumed, and the journal must heal instead of staying locked."""
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    obj = TPUCostModelObjective()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    with open(journal.path, "w") as f:          # torn very first write
+        f.write('{"kind": "hea')
+    assert journal.load(wl, obj) == {}
+    assert (tmp_path / (journal.path.split("/")[-1] + ".corrupt")).exists()
+    res = run_sweep(build_space(wl), obj,
+                    journal=SweepJournal.for_workload(str(tmp_path), wl, obj))
+    assert res.resumed == 0 and res.evaluations == res.total
+    fresh = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    assert fresh.read_header() is not None      # healed with a real header
+
+
+def test_journal_survives_torn_trailing_line(tmp_path):
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    obj = TPUCostModelObjective()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    res = run_sweep(build_space(wl), obj, journal=journal)
+    with open(journal.path, "a") as f:
+        f.write('{"k": "truncated mid-wri')     # kill -9 mid-append
+    done = journal.load(wl, obj)
+    assert len(done) == res.total               # torn line skipped
+
+
+def test_analytical_pruning_keeps_topk():
+    wl = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    space = build_space(wl)
+    obj = TPUCostModelObjective()
+    full = run_sweep(space, obj)
+    pruned = run_sweep(space, obj, prune="analytical", top_k=50)
+    assert pruned.total == 50
+    assert pruned.pruned == full.total - 50
+    assert pruned.stopped_by == "pruned"
+    # the expert ranking should keep the optimum's neighbourhood
+    assert pruned.best_time <= full.best_time * 1.2
+    with pytest.raises(ValueError, match="prune"):
+        run_sweep(space, obj, prune="nonsense")
+    with pytest.raises(ValueError, match="top_k"):
+        run_sweep(space, obj, prune="analytical", top_k=0)
+
+
+def test_pruned_journal_excluded_from_dataset_until_complete(tmp_path):
+    """A pruned sweep's journal must not masquerade as a complete
+    enumeration for training labels; finishing the space rehabilitates it."""
+    from repro.tuning.ml.dataset import dataset_from_journal
+
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    space = build_space(wl)
+    obj = TPUCostModelObjective()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    run_sweep(space, obj, journal=journal, prune="analytical", top_k=8)
+    assert journal.read_header()["pruned"] > 0
+    assert len(dataset_from_journal(journal.path)) == 0   # unguaranteed
+
+    # an unpruned sweep on the same journal completes the space
+    full = run_sweep(space, obj, journal=journal)
+    assert full.resumed == 8
+    ds = dataset_from_journal(journal.path)
+    assert len(ds) == full.total                          # now trainable
+
+
+def test_cached_objective_batch_marks_measurement_failures_invalid():
+    """assume_valid skips the space re-check only: a config the inner
+    objective failed to measure (clamped to the penalty) must not be
+    cached as a valid 60 s data point."""
+    from repro.core.objective import Measurement, Objective
+
+    class FailsOne(Objective):
+        """Measurement-invalid on radix=8 (e.g. wallclock timeout / OOM);
+        base-class batch_eval walks __call__, like any real host objective."""
+
+        def __init__(self):
+            self.model = TPUCostModelObjective()
+
+        def __call__(self, space, cfg):
+            if cfg.get("radix") == 8:
+                return Measurement(PENALTY_TIME * 2, False)
+            return self.model(space, cfg)
+
+    space = build_space(Workload(op="fft", n=256, batch=2**14,
+                                 variant="stockham"))
+    obj = CachedObjective(FailsOne())
+    cands = space.enumerate_valid()
+    times = obj.batch_eval(space, cands, assume_valid=True)
+    failed = [i for i, c in enumerate(cands) if c["radix"] == 8]
+    assert failed and all(times[i] == PENALTY_TIME for i in failed)
+    for i in failed:
+        m = obj(space, cands[i])               # scalar read of the cache
+        assert not m.valid and m.time_s == PENALTY_TIME
+
+
+def test_pruned_winner_not_stored_as_exhaustive(tmp_path):
+    """dataset_from_db trusts method='exhaustive' winners as group optima;
+    a pruned sweep's winner carries no such guarantee."""
+    from repro.tuning.ml.dataset import dataset_from_db
+
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    session.tune(wl, method="exhaustive", prune="analytical", top_k=16)
+    entry = next(iter(session.db.entries().values()))
+    assert entry["method"] == "exhaustive-pruned"
+    assert len(dataset_from_db(session.db)) == 0   # excluded from labels
+    # an unpruned sweep still stores (and trains) as before
+    session.tune(wl, method="exhaustive")
+    assert len(dataset_from_db(session.db)) == 1
+
+
+def test_exhaustive_strategy_journals_through_session(tmp_path):
+    session = TunerSession(db_path=str(tmp_path / "db.json"),
+                           sweep_dir=str(tmp_path / "sweeps"))
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    res = session.tune(wl, method="exhaustive")
+    journals = list((tmp_path / "sweeps").glob("*.jsonl"))
+    assert len(journals) == 1
+    entries = SweepJournal(str(journals[0])).entries()
+    assert len(entries) == len(res.history)
+    assert session.lookup(wl) == res.best_config
+
+
+def test_session_tolerates_legacy_strategy_signature(tmp_path):
+    def legacy(space, objective, *, seed=0, max_evals=0):
+        return ExhaustiveSearch().tune(space, objective)
+
+    register_strategy("legacy_sweepless", legacy)
+    try:
+        session = TunerSession(db_path=str(tmp_path / "db.json"),
+                               sweep_dir=str(tmp_path / "sweeps"))
+        wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+        res = session.tune(wl, method="legacy_sweepless")
+        assert res.stopped_by == "exhausted"
+    finally:
+        _STRATEGIES.pop("legacy_sweepless", None)
+
+
+def test_sweep_faster_than_seed_loop():
+    """Loose in-suite floor (3x) for the vectorization win; the >= 10x
+    acceptance gate runs in benchmarks/bench_sweep.py on big spaces."""
+    import time
+    wl = Workload(op="ssd", n=1024, batch=2**16)
+    space = build_space(wl)
+    obj = TPUCostModelObjective()
+    cands = space.enumerate_valid()
+
+    def loop():
+        return [obj(space, c).time_s for c in cands]
+
+    t_loop = min(_timed(loop) for _ in range(3))
+    t_batch = min(_timed(lambda: obj.batch_eval(space, cands,
+                                                assume_valid=True))
+                  for _ in range(3))
+    assert t_loop / t_batch >= 3, \
+        f"batched sweep only {t_loop / t_batch:.1f}x faster"
+
+
+def _timed(fn):
+    import time
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# stopped_by semantics (satellite fixes)
+# ---------------------------------------------------------------------------
+
+def test_random_search_stopped_by_semantics():
+    space = build_space(Workload(op="tridiag", n=128, batch=4, variant="pcr"))
+    size = space.size()
+    obj = TPUCostModelObjective()
+    capped = RandomSearch(max_evals=size - 2, seed=0).tune(space, obj)
+    assert capped.stopped_by == "max_evals"
+    assert capped.evaluations == size - 2
+    full = RandomSearch(max_evals=size + 10, seed=0).tune(space, obj)
+    assert full.stopped_by == "exhausted"     # enumerated the whole space
+    assert full.evaluations == size
+
+
+def test_transfer_stopped_by_semantics():
+    wl = Workload(op="fft", n=512, batch=2**17, variant="stockham")
+    space = build_space(wl)
+    obj = CachedObjective(TPUCostModelObjective(noise=0.02))
+    res = TransferBayesianTuner(seed=0, max_evals=5, patience=999).tune(
+        space, obj, histories=())
+    assert res.stopped_by == "max_evals"       # budget bound, not exhaustion
+    assert res.evaluations == 5
+
+    small = build_space(Workload(op="tridiag", n=128, batch=4, variant="pcr"))
+    res2 = TransferBayesianTuner(seed=0, max_evals=500, patience=999).tune(
+        small, CachedObjective(TPUCostModelObjective(noise=0.02)),
+        histories=())
+    assert res2.stopped_by == "exhausted"
+    assert res2.evaluations == small.size()
+
+
+# ---------------------------------------------------------------------------
+# bayesian: pure numpy, no scipy (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_bayesian_works_with_scipy_blocked(monkeypatch):
+    import repro.core.bayesian as bayes
+    src = inspect.getsource(bayes)
+    assert "import scipy" not in src and "from scipy" not in src, \
+        "core.bayesian is documented as pure numpy"
+    # block any sneaky import path and run a real BO loop
+    monkeypatch.setitem(sys.modules, "scipy", None)
+    monkeypatch.setitem(sys.modules, "scipy.special", None)
+    space = build_space(Workload(op="fft", n=256, batch=2**14,
+                                 variant="stockham"))
+    res = BayesianTuner(seed=0, max_evals=10).tune(
+        space, CachedObjective(TPUCostModelObjective()))
+    assert space.is_valid(res.best_config)
+    assert res.evaluations > 0
+
+
+# ---------------------------------------------------------------------------
+# Methodology comparison report
+# ---------------------------------------------------------------------------
+
+def test_compare_methods_report_structure_and_sanity():
+    wls = [Workload(op="tridiag", n=n, batch=2**13, variant="pcr")
+           for n in (128, 256)]
+    report = compare_methods(
+        wls, methods=("analytical", "bayesian", "random"),
+        objective_factory=lambda: TPUCostModelObjective(noise=0.02),
+        seed=0, max_evals=6)
+    assert check_report(report) == []
+    assert report["methods"] == ["analytical", "bayesian", "random"]
+    assert len(report["workloads"]) == 2
+    for row in report["workloads"]:
+        assert row["exhaustive_evaluations"] == row["space_size"]
+        for m in row["methods"].values():
+            assert m["slowdown"] >= 1.0 - 1e-9       # never beats exhaustive
+            assert m["efficiency"] <= 1.0 + 1e-9
+    for agg in report["overall"].values():
+        assert 0.0 < agg["phi"] <= 1.0 + 1e-9
+    assert report["overall"]["analytical"]["total_evaluations"] == 0
+    assert "tridiag" in format_report(report)
+
+
+def test_compare_methods_journal_resume_survives_host_drift(tmp_path):
+    """On a journal-resumed run, strategies must be scored on the sweep's
+    recorded times — re-measuring on a 'faster host' would produce a false
+    'beat exhaustive' violation."""
+    from repro.core.objective import Measurement, Objective
+
+    class Drifting(Objective):
+        """Each instance measures 10x faster than the journal's writer."""
+
+        def __init__(self, scale):
+            self.model = TPUCostModelObjective()
+            self.scale = scale
+
+        def __call__(self, space, cfg):
+            m = self.model(space, cfg)
+            return Measurement(m.time_s * self.scale, m.valid)
+
+        def signature(self):   # same identity -> journal resumes
+            return "drifting-host"
+
+    wls = [Workload(op="tridiag", n=128, batch=2**13, variant="pcr")]
+    first = compare_methods(wls, methods=("random",),
+                            objective_factory=lambda: Drifting(10.0),
+                            seed=0, max_evals=4, journal_dir=str(tmp_path))
+    assert check_report(first) == []
+    # resumed run: the journal holds 10x-slower times than live measurement
+    second = compare_methods(wls, methods=("random",),
+                             objective_factory=lambda: Drifting(1.0),
+                             seed=0, max_evals=4, journal_dir=str(tmp_path))
+    assert check_report(second) == []
+    row = second["workloads"][0]
+    assert row["methods"]["random"]["slowdown"] >= 1.0 - 1e-9
+
+
+def test_compare_methods_flags_exhaustive_beaten():
+    """Phi > 1 is a bug detector: a strategy 'beating' exhaustive fails."""
+    from repro.core.bayesian import TuneResult
+
+    def cheat(space, objective, *, seed=0, max_evals=0, **_):
+        cfg = space.enumerate_valid()[0]
+        return TuneResult(cfg, 1e-12, 0, [(cfg, 1e-12)], "cheat")
+
+    register_strategy("cheat", cheat)
+    try:
+        wls = [Workload(op="tridiag", n=128, batch=2**13, variant="pcr")]
+        report = compare_methods(wls, methods=("cheat",), seed=0)
+        failures = check_report(report)
+        assert failures and "beat exhaustive" in failures[0]
+    finally:
+        _STRATEGIES.pop("cheat", None)
