@@ -1,0 +1,150 @@
+"""Micro-benchmark: online-tuner overhead on the serving decode path.
+
+Serves the same request load through two engines built from one model:
+
+  * plain    — no step hooks registered (the timing branch never runs);
+  * tuned    — an OnlineTuner attached: every decode step is timed, fed
+               to the EWMA state machine, and wrapped in the active
+               trial's config override.
+
+Reported metric: **steady-state** per-decode-step wall time, min over
+repetitions. Each repetition warms a fresh engine until its tuner's
+trial phase is over (trial configs re-trace the jitted decode — a real,
+bounded startup cost a production rollout pays once per candidate, not
+per step), so the measured window isolates the per-step hook cost:
+timer reads, EWMA bookkeeping, override plumbing. Acceptance: the tuned
+engine pays **< 5%** per step over the untimed engine.
+
+    PYTHONPATH=src python benchmarks/bench_online.py --json BENCH_ONLINE.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+MAX_OVERHEAD = 0.05     # the <5% per-step acceptance gate
+
+
+def _make_engine(model, params, tuned: bool, *, max_batch: int, budget: int):
+    from repro.core.space import Workload
+    from repro.serve.engine import ServeEngine
+    from repro.tuning import OnlineTuner, TunerSession, attach
+
+    engine = ServeEngine(model, params, max_batch=max_batch, max_len=128)
+    tuner = None
+    if tuned:
+        wl = Workload(op="attention", n=128, batch=max_batch,
+                      variant="flash")
+        session = TunerSession(db_path=os.path.join(
+            tempfile.mkdtemp(prefix="bench_online_"), "db.json"))
+        tuner = OnlineTuner(wl, session, budget=budget, min_samples=2,
+                            samples_per_trial=4, store=True)
+        attach(engine, tuner)
+    return engine, tuner
+
+
+def _serve_load(engine, vocab: int, requests: int, max_new: int,
+                seed: int) -> int:
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        plen = int(rng.integers(4, 12))
+        engine.submit(rng.integers(0, vocab, size=plen),
+                      max_new_tokens=max_new)
+    before = engine._step_index
+    engine.run(max_steps=10_000)
+    return engine._step_index - before
+
+
+def run(emit, *, seed: int = 0, smoke: bool = False) -> float:
+    from repro.configs.base import get_arch
+    from repro.models.model import build_model
+
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    requests = 4 if smoke else 12
+    max_new = 8 if smoke else 16
+    reps = 2 if smoke else 5
+
+    # throwaway engine first: the very first decode pays one-time process
+    # warmth (allocator, XLA autotuning) that would otherwise land entirely
+    # on whichever mode is measured first
+    _serve_load(_make_engine(model, params, False, max_batch=4, budget=1)[0],
+                cfg.vocab, requests=2, max_new=4, seed=seed + 999)
+
+    # interleave plain/tuned reps: host drift (turbo ramp, cache warmth)
+    # hits both modes, not whichever ran last
+    per_step = {"plain": float("inf"), "tuned": float("inf")}
+    for rep in range(reps):
+        # alternate which mode runs first: within a rep the second run is
+        # always warmer, and a fixed order turns that into a fake win
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        for tuned in order:
+            name = "tuned" if tuned else "plain"
+            engine, tuner = _make_engine(model, params, tuned, max_batch=4,
+                                         budget=8)
+            # warmup: compile decode AND drain the tuner's trial phase
+            # (per-config re-traces are startup cost, not per-step cost)
+            # outside the measured window; hooks stay live afterwards
+            warm = 0
+            while warm < 8 and (tuner is None or not tuner.finished):
+                _serve_load(engine, cfg.vocab, requests=4, max_new=8,
+                            seed=seed + 100 + rep + warm)
+                warm += 1
+                if tuner is None:
+                    break
+            assert tuner is None or tuner.finished, "trials did not drain"
+            t0 = time.perf_counter()
+            steps = _serve_load(engine, cfg.vocab, requests=requests,
+                                max_new=max_new, seed=seed + rep)
+            dt = time.perf_counter() - t0
+            per_step[name] = min(per_step[name], dt / max(steps, 1))
+    for name, best in per_step.items():
+        emit(f"online,{name},step_us,{best*1e6:.1f}")
+
+    overhead = per_step["tuned"] / per_step["plain"] - 1.0
+    emit(f"online,overhead,frac,{overhead:.4f}")
+    return overhead
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_ONLINE.json summary")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced load for CI smoke runs")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="record the overhead without gating on it (noisy "
+                         "shared CI runners)")
+    args = ap.parse_args()
+    rows = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    overhead = run(emit, seed=args.seed, smoke=args.smoke)
+    if not args.no_assert:
+        assert overhead < MAX_OVERHEAD, \
+            f"online tuner costs {overhead:.1%} per decode step " \
+            f"(gate: <{MAX_OVERHEAD:.0%})"
+        print(f"# acceptance ok: tuner overhead {overhead:.2%} per step "
+              f"(< {MAX_OVERHEAD:.0%})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "online", "seed": args.seed,
+                       "smoke": bool(args.smoke), "rows": rows,
+                       "summary": {"overhead_frac": overhead}},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

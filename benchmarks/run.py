@@ -8,7 +8,8 @@ Prints ``name,...`` CSV rows:
   roofline            — per (arch x shape) three-term roofline summary;
   resolve             — TunerSession online hot-path vs seed miss path;
   sweep               — vectorized sweep engine vs seed per-config loop;
-  ml_predict          — learned-predictor rank latency + holdout accuracy.
+  ml_predict          — learned-predictor rank latency + holdout accuracy;
+  online              — OnlineTuner per-decode-step overhead vs untimed.
 
 ``--seed`` flows into every stochastic section so CI runs are
 reproducible; ``--json-dir`` writes one BENCH_<SECTION>.json per section
@@ -27,7 +28,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
-                         "resolve,sweep,ml_predict")
+                         "resolve,sweep,ml_predict,online")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -71,6 +72,9 @@ def main() -> None:
     if begin("ml_predict"):
         from benchmarks.bench_ml_predict import run as run_ml
         run_ml(emit, seed=args.seed, smoke=args.smoke)
+    if begin("online"):
+        from benchmarks.bench_online import run as run_online
+        run_online(emit, seed=args.seed, smoke=args.smoke)
 
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)

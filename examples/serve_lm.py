@@ -1,20 +1,34 @@
-"""Batched serving example: continuous batching over mixed-length requests.
+"""Batched serving example: continuous batching over mixed-length requests,
+with an OnlineTuner trialing kernel configs against the live decode steps.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
+import tempfile
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.base import get_arch
+from repro.core.space import Workload
 from repro.models.model import build_model
 from repro.serve.engine import ServeEngine
+from repro.tuning import OnlineTuner, TunerSession, attach
 
 cfg = get_arch("qwen1.5-0.5b").reduced()
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 engine = ServeEngine(model, params, max_batch=4, max_len=128)
+
+# online tuning: wall-clock-time every decode step, shadow-trial candidate
+# attention configs under a strict measurement budget, roll back slowdowns
+import os
+session = TunerSession(
+    db_path=os.path.join(tempfile.mkdtemp(prefix="serve_lm_"), "db.json"))
+tuner = OnlineTuner(Workload(op="attention", n=128, batch=4,
+                             variant="flash"),
+                    session, budget=16, guard_band=0.25)
+attach(engine, tuner)
 
 rng = np.random.default_rng(0)
 for i in range(10):
@@ -28,3 +42,8 @@ print(f"[serve_lm] {len(done)} requests / {tokens} tokens in {dt:.2f}s "
       f"({tokens/dt:.1f} tok/s, continuous batching over 4 slots)")
 for r in done[:3]:
     print(f"  req {r.rid}: {len(r.prompt)}-token prompt -> {r.output}")
+
+s = tuner.summary()
+print(f"[serve_lm] online tuner: {s['state']} after {s['steps']} steps, "
+      f"{s['measured']}/{s['budget']} trial measurements, "
+      f"{s['promotions']} promotion(s)")

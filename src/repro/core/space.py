@@ -36,6 +36,18 @@ def pow2_range(lo: int, hi: int) -> Tuple[int, ...]:
     return tuple(out)
 
 
+def floor_pow2(v: int) -> int:
+    """Largest power of two <= v (v >= 1).
+
+    Space builders bound their rows/tile domains with this so odd batch
+    sizes (3 active serving slots, a ragged last shard) build a valid
+    space instead of tripping ``pow2_range``'s power-of-two precondition.
+    """
+    v = int(v)
+    assert v >= 1, v
+    return 1 << (v.bit_length() - 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParamSpec:
     """One Performance Parameter: a named discrete domain."""
@@ -203,7 +215,7 @@ def in_register_rule():
 
 def scan_space(wl: Workload) -> SearchSpace:
     eb = dtype_bytes(wl.dtype)
-    max_rows = min(512, max(wl.batch, 1))
+    max_rows = floor_pow2(min(512, max(wl.batch, 1)))
     params = [
         ParamSpec("tile_n", tuple(v for v in pow2_range(128, max(wl.n, 128)) if v <= wl.n) or (wl.n,)),
         ParamSpec("rows_per_program", pow2_range(1, max_rows)),
@@ -227,7 +239,7 @@ def scan_space(wl: Workload) -> SearchSpace:
 def tridiag_space(wl: Workload) -> SearchSpace:
     # each element is an equation: 4 coefficients (a,b,c,d)
     eb = 4 * dtype_bytes(wl.dtype)
-    max_rows = min(256, max(wl.batch, 1))
+    max_rows = floor_pow2(min(256, max(wl.batch, 1)))
     radix_dom = (2, 4, 8) if wl.variant == "wm" else (2,)  # paper: only WM retunes r
     params = [
         ParamSpec("tile_n", (wl.n,)),           # whole system stays resident
@@ -250,7 +262,7 @@ def tridiag_space(wl: Workload) -> SearchSpace:
 
 def fft_space(wl: Workload) -> SearchSpace:
     eb = 2 * dtype_bytes(wl.dtype)  # complex: interleaved re/im
-    max_rows = min(256, max(wl.batch, 1))
+    max_rows = floor_pow2(min(256, max(wl.batch, 1)))
     params = [
         ParamSpec("tile_n", (wl.n,)),
         ParamSpec("rows_per_program", pow2_range(1, max_rows)),
@@ -272,7 +284,7 @@ def large_fft_space(wl: Workload, max_tile: int = 4096) -> SearchSpace:
     the per-pass working-set S; m = ceil(log(N)/log(S)).
     """
     eb = 2 * dtype_bytes(wl.dtype)
-    max_rows = min(64, max(wl.batch, 1))
+    max_rows = floor_pow2(min(64, max(wl.batch, 1)))
     tiles = tuple(v for v in pow2_range(256, max_tile))
     params = [
         ParamSpec("tile_n", tiles),

@@ -1,9 +1,9 @@
 """Methodology comparison against the exhaustive optimum (paper Table II).
 
 For every workload the exhaustive sweep supplies the ground-truth optimum;
-each methodology (analytical / ml / bayesian / random / ...) is then scored
-on the SAME cached objective, so every reported time is a time the sweep
-actually measured.  That construction makes the report a bug detector:
+each methodology (analytical / ml / online / bayesian / random / ...) is
+then scored on the SAME cached objective, so every reported time is a time
+the sweep actually measured.  That construction makes the report a bug detector:
 performance efficiency is ``best_time / achieved_time`` and can only
 exceed 1.0 — "a methodology beat exhaustive search" — if the sweep, the
 cache, or a strategy mishandled the objective.  ``check_report`` turns any
@@ -27,7 +27,7 @@ from repro.core.objective import CachedObjective, Objective, TPUCostModelObjecti
 from repro.core.space import Workload, build_space
 from repro.tuning.session import get_strategy
 
-DEFAULT_METHODS = ("analytical", "ml", "bayesian", "random")
+DEFAULT_METHODS = ("analytical", "ml", "online", "bayesian", "random")
 
 # efficiencies this far above 1.0 are fp-noise, beyond it a violation
 EFFICIENCY_EPS = 1e-9

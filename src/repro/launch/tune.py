@@ -26,9 +26,20 @@ Methodology comparison (the paper's Table II as a CI artifact):
   PYTHONPATH=src python -m repro.launch.tune compare-methods \
       --json BENCH_methods.json [--model artifacts/ml_model.npz]
 
-runs analytical/ml/bayesian/random against the exhaustive optimum on the
-holdout suite and exits non-zero if exhaustive is ever beaten (Phi > 1 is
-a sweep/objective bug, not a better methodology).
+runs analytical/ml/online/bayesian/random against the exhaustive optimum
+on the holdout suite and exits non-zero if exhaustive is ever beaten
+(Phi > 1 is a sweep/objective bug, not a better methodology).
+
+Online tuning replay (the deployment mode's deterministic test bench):
+
+  PYTHONPATH=src python -m repro.launch.tune online-replay \
+      --trace artifacts/serve_trace.jsonl [--db tuning_db.json] [--budget 32]
+
+replays a recorded (config, step latency) trace — e.g. from
+``repro.launch.serve --record-trace`` — through the OnlineTuner state
+machine: same trace + same knobs -> same trials, same rollbacks, same
+winner. With ``--db`` the promoted winner persists exactly as it would in
+production.
 """
 from __future__ import annotations
 
@@ -130,6 +141,79 @@ def train_model_main(argv: List[str]) -> int:
     return 0
 
 
+def online_replay_main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(prog="tune online-replay",
+                                 description="Replay a recorded serving "
+                                             "trace through the OnlineTuner")
+    ap.add_argument("--trace", required=True,
+                    help="JSONL trace from launch.serve --record-trace")
+    ap.add_argument("--db", default=None,
+                    help="TuningDB to persist the promoted winner into "
+                         "(default: replay only, nothing stored)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="journal trial EWMAs here (sweep-journal format)")
+    ap.add_argument("--budget", type=int, default=32)
+    ap.add_argument("--guard-band", type=float, default=0.25)
+    ap.add_argument("--min-samples", type=int, default=3)
+    ap.add_argument("--samples-per-trial", type=int, default=8)
+    ap.add_argument("--json", default=None, help="write the summary here")
+    args = ap.parse_args(argv)
+
+    from repro.core.analytical import AnalyticalTuner
+    from repro.core.space import build_space
+    from repro.tuning import OnlineTuner, ReplayTrace, TunerSession, replay
+    from repro.tuning.online import replay_candidates
+    from repro.tuning.sweep import config_key
+
+    trace = ReplayTrace.load(args.trace)
+    wl = trace.workload.canonical()
+    session = TunerSession(db_path=args.db) if args.db else None
+    store = session is not None
+
+    prior = session.resolve_raw(wl) if session is not None \
+        else AnalyticalTuner().suggest(build_space(wl))
+    if config_key(prior) not in trace.times:
+        # the trace never measured the configured prior (e.g. a DB-less
+        # replay of someone else's traffic): start from the config the
+        # traffic actually ran, so the baseline is a real measurement
+        first = next(iter(trace.configs))
+        print(f"[online-replay] prior not in trace; using recorded config "
+              f"{trace.configs[first]} as incumbent")
+        prior = trace.configs[first]
+    # trial only configs the trace can answer for — every recorded config
+    # stays in the queue (expert-ranked, never truncated: the trace's
+    # measured winner may rank poorly analytically and must still run)
+    space = build_space(wl)
+    candidates = replay_candidates(space, trace, prior)
+
+    tuner = OnlineTuner(wl, session, prior=prior, candidates=candidates,
+                        budget=args.budget, guard_band=args.guard_band,
+                        min_samples=args.min_samples,
+                        samples_per_trial=args.samples_per_trial,
+                        journal_dir=args.journal_dir, store=store,
+                        source=trace.source)
+    res = replay(tuner, trace)
+    s = tuner.summary()
+    print(f"[online-replay] {wl.key}: {trace.steps()} recorded steps, "
+          f"{len(candidates)} candidates")
+    print(f"[online-replay] stopped_by={res.stopped_by} "
+          f"measured={s['measured']}/{s['budget']} "
+          f"promotions={s['promotions']}")
+    for t in s["trials"]:
+        ewma = f"{t['ewma_s']*1e3:.3f}ms" if t["ewma_s"] else "-"
+        print(f"[online-replay]   {t['config']} -> {t['state']} "
+              f"(samples={t['samples']}, ewma={ewma})")
+    print(f"[online-replay] winner {res.best_config} "
+          f"ewma={res.best_time*1e3:.3f}ms"
+          + (f" (persisted to {args.db})" if store and s["promotions"]
+             else ""))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(s, f, indent=1, sort_keys=True)
+        print(f"[online-replay] summary written to {args.json}")
+    return 0
+
+
 def compare_methods_main(argv: List[str]) -> int:
     ap = argparse.ArgumentParser(prog="tune compare-methods",
                                  description="Score every methodology "
@@ -141,7 +225,7 @@ def compare_methods_main(argv: List[str]) -> int:
     ap.add_argument("--split", default="holdout", choices=("train", "holdout"),
                     help="which suite split to score (default holdout)")
     ap.add_argument("--methods", default=",".join(
-                        ("analytical", "ml", "bayesian", "random")),
+                        ("analytical", "ml", "online", "bayesian", "random")),
                     help="comma list of strategies to compare")
     ap.add_argument("--model", default=None,
                     help="ML model artifact for strategy='ml' (sets "
@@ -259,6 +343,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return eval_model_main(argv[1:])
     if argv and argv[0] == "compare-methods":
         return compare_methods_main(argv[1:])
+    if argv and argv[0] == "online-replay":
+        return online_replay_main(argv[1:])
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--op", default=None)

@@ -6,17 +6,29 @@ prefill forward recomputes the prompt; for cache-full archs the prompt K/V
 are inserted by replaying tokens through decode for simplicity at host
 scale — production TPU path would bulk-write prefill K/V); decode steps run
 all active slots in lockstep (one jitted decode_step per token).
+
+Online-tuning hooks (see ``repro.tuning.online``): the engine accepts an
+injectable ``step_timer`` (any zero-arg callable returning monotonic
+seconds — a fake clock in tests), reports every timed decode step to
+registered listeners as a :class:`StepRecord`, and applies an optional
+override-provider's config fragments around each step so an
+:class:`~repro.tuning.online.OnlineTuner` can run shadowed trials against
+live traffic. With no listeners registered the loop takes the exact
+pre-hook path — an untimed engine pays nothing.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.tuning.overrides import overrides as _tuning_overrides
 
 PyTree = Any
 
@@ -30,9 +42,19 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    """One timed decode step, as reported to step listeners."""
+
+    index: int          # monotonically increasing decode-step counter
+    duration_s: float   # wall-clock (or fake-clock) duration of the step
+    active: int         # slots that were decoding during the step
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: PyTree, max_batch: int = 8,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0,
+                 step_timer: Optional[Callable[[], float]] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -43,8 +65,34 @@ class ServeEngine:
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)
         self._decode = jax.jit(model.decode_step)
+        # decode is jitted, so kernel configs resolved at TRACE time are
+        # baked into the compiled executable — an overrides() frame around
+        # later calls cannot reach it. Each distinct override fragment
+        # therefore gets its own jitted variant, re-traced (and its config
+        # re-resolved) under that frame; revisits are cache hits.
+        self._decode_variants: Dict[object, Callable] = {None: self._decode}
+        self._active_overrides: Optional[Dict] = None
         self.queue: List[Request] = []
         self.completed: List[Request] = []
+        # -- step hooks (timing is only paid when a listener is registered)
+        self.step_timer: Callable[[], float] = step_timer or time.perf_counter
+        self._step_listeners: List[Callable[[StepRecord], None]] = []
+        self._override_provider: Optional[
+            Callable[[], Optional[Mapping[str, Mapping[str, int]]]]] = None
+        self._step_index = 0
+
+    def add_step_listener(self, fn: Callable[[StepRecord], None]) -> None:
+        """Register a callback invoked after every timed decode step."""
+        self._step_listeners.append(fn)
+
+    def set_override_provider(
+            self, fn: Optional[
+                Callable[[], Optional[Mapping[str, Mapping[str, int]]]]],
+    ) -> None:
+        """Install a provider of per-op config overrides, consulted before
+        each step and applied (via the thread-local override stack) around
+        it — how an online tuner's active trial reaches the kernels."""
+        self._override_provider = fn
 
     # -- public API --
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
@@ -60,14 +108,56 @@ class ServeEngine:
         return rid
 
     def run(self, max_steps: int = 1000) -> List[Request]:
+        """Serve until the queue drains (or ``max_steps``).
+
+        Returns completed requests in **submission order** (ascending
+        ``rid``) — a stable contract that deterministic consumers (trace
+        replay, batched clients zipping prompts with results) rely on.
+        ``self.completed`` retains completion order for schedulers that
+        care about finishing sequence.
+        """
         steps = 0
         while (self.queue or any(self.slot_req)) and steps < max_steps:
-            self._admit()
-            self._decode_step()
+            ov = self._override_provider() if self._override_provider else None
+            if ov != self._active_overrides:
+                self._select_decode_variant(ov)
+            ctx = _tuning_overrides(**ov) if ov else contextlib.nullcontext()
+            with ctx:
+                self._admit()
+                active = sum(r is not None for r in self.slot_req)
+                if self._step_listeners and active:
+                    t0 = self.step_timer()
+                    self._decode_step()
+                    record = StepRecord(self._step_index,
+                                        self.step_timer() - t0, active)
+                    for listener in self._step_listeners:
+                        listener(record)
+                else:
+                    self._decode_step()
+            self._step_index += 1
             steps += 1
-        return self.completed
+        return sorted(self.completed, key=lambda r: r.rid)
 
     # -- internals --
+    def _select_decode_variant(self, ov: Optional[Dict]) -> None:
+        """Switch to (or build) the jitted decode traced under ``ov``.
+
+        First use of a config pays one re-trace/compile — landing inside
+        that trial's first timed step, which the online tuner's
+        first-sample baseline discard absorbs; returning to a previously
+        seen config (the incumbent after a rollback) is a dict hit.
+        """
+        self._active_overrides = None if ov is None \
+            else {op: dict(frag) for op, frag in ov.items()}
+        key = None if ov is None else tuple(
+            (op, tuple(sorted(frag.items())))
+            for op, frag in sorted(ov.items()))
+        fn = self._decode_variants.get(key)
+        if fn is None:
+            fn = jax.jit(self.model.decode_step)
+            self._decode_variants[key] = fn
+        self._decode = fn
+
     def _admit(self) -> None:
         for slot in range(self.max_batch):
             if self.slot_req[slot] is not None:

@@ -35,6 +35,23 @@ from repro.tuning.sweep import (SweepJournal, SweepResult, config_key,
                                 journal_path, prune_candidates, run_sweep)
 
 
+# The online-tuning stack (repro.tuning.online) stays a lazy import, like
+# the ml stack: it pulls in the sweep journal + analytical ranking, and
+# the serve engine imports this package on every startup. PEP 562 keeps
+# `from repro.tuning import OnlineTuner` working without the eager cost.
+_ONLINE_EXPORTS = frozenset((
+    "OnlineTuner", "OnlineWallClockObjective", "ReplayTrace", "StepTimer",
+    "TraceRecorder", "attach", "online_search", "replay",
+    "replay_candidates"))
+
+
+def __getattr__(name: str):
+    if name in _ONLINE_EXPORTS:
+        from repro.tuning import online
+        return getattr(online, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 def resolve(wl: Workload, *, config: Optional[Mapping[str, int]] = None,
             dims: Optional[Mapping[str, int]] = None) -> Config:
     """Resolve a launch-ready config through the default session."""
@@ -52,13 +69,15 @@ def suggest(wl: Workload) -> Config:
 
 
 __all__ = [
-    "Config", "DEFAULT_DB_PATH", "KernelSpec", "SCHEMA_VERSION",
-    "SweepJournal", "SweepResult", "TuneResult",
-    "TunerSession", "TuningDB", "Workload", "active_overrides", "build_space",
-    "config_key", "default_session", "fit_block", "get_kernel",
+    "Config", "DEFAULT_DB_PATH", "KernelSpec", "OnlineTuner",
+    "OnlineWallClockObjective", "ReplayTrace", "SCHEMA_VERSION", "StepTimer",
+    "SweepJournal", "SweepResult", "TraceRecorder", "TuneResult",
+    "TunerSession", "TuningDB", "Workload", "active_overrides", "attach",
+    "build_space", "config_key", "default_session", "fit_block", "get_kernel",
     "get_strategy", "journal_path", "normalize_config",
-    "normalizer_for", "on_cpu", "overrides", "overrides_active",
-    "plan_execution", "prune_candidates", "register_strategy",
-    "registered_kernels", "resolve", "run_sweep",
-    "set_default_session", "strategies", "suggest", "tune", "tuned_kernel",
+    "normalizer_for", "on_cpu", "online_search", "overrides",
+    "overrides_active", "plan_execution", "prune_candidates",
+    "register_strategy", "registered_kernels", "replay",
+    "replay_candidates", "resolve", "run_sweep", "set_default_session",
+    "strategies", "suggest", "tune", "tuned_kernel",
 ]

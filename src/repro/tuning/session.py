@@ -75,6 +75,16 @@ def _analytical(space, objective, *, seed: int = 0, max_evals: int = 0,
     return TuneResult(cfg, m.time_s, 0, [(cfg, m.time_s)], "analytical")
 
 
+def _online(space, objective, *, seed: int = 0, max_evals: int = 16,
+            **_sweep) -> TuneResult:
+    # lazy import (online pulls in the sweep journal stack). Simulates
+    # in-traffic tuning against the objective: analytical prior, trial /
+    # guard-band / rollback state machine, max_evals as the measurement
+    # budget (see repro.tuning.online).
+    from repro.tuning.online import online_search
+    return online_search(space, objective, seed=seed, budget=max_evals)
+
+
 def _ml(space, objective, *, seed: int = 0, max_evals: int = 0,
         **_sweep) -> TuneResult:
     # lazy import: the forest/feature stack only loads when strategy="ml" is
@@ -92,6 +102,7 @@ _STRATEGIES: Dict[str, Strategy] = {
     "random": _random,
     "analytical": _analytical,
     "ml": _ml,
+    "online": _online,
 }
 
 

@@ -98,6 +98,8 @@ class SweepJournal:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     continue     # torn trailing line from a killed run
+                if not isinstance(rec, dict):
+                    continue     # parseable but not a record (e.g. "123")
                 if i == 0 and rec.get("kind") == "header":
                     self._check_header(rec, wl, objective)
                     header_ok = True
@@ -123,7 +125,8 @@ class SweepJournal:
             rec = json.loads(first)
         except json.JSONDecodeError:
             return None
-        return rec if rec.get("kind") == "header" else None
+        return rec if isinstance(rec, dict) and rec.get("kind") == "header" \
+            else None
 
     def entries(self) -> List[Tuple[Config, float]]:
         """Completed (config, time) pairs, first-completion order.
@@ -145,7 +148,8 @@ class SweepJournal:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     continue
-                if rec.get("kind") == "header" or "cfg" not in rec:
+                if not isinstance(rec, dict) or rec.get("kind") == "header" \
+                        or "cfg" not in rec:
                     continue
                 cfg = {k: int(v) for k, v in rec["cfg"].items()}
                 key = config_key(cfg)
@@ -212,11 +216,27 @@ class SweepJournal:
         payload = "".join(line + "\n" for line in lines).encode()
         if not payload:
             return
+        if self._tail_torn():
+            # a previous writer died mid-line: appending directly would glue
+            # our first record onto the torn bytes and lose BOTH lines to
+            # the json parse. Terminate the torn line first — load() skips
+            # it, and every entry in this payload stays parseable.
+            payload = b"\n" + payload
         fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
         try:
             os.write(fd, payload)
         finally:
             os.close(fd)
+
+    def _tail_torn(self) -> bool:
+        """True when the journal ends mid-line (a writer was killed inside
+        its os.write) — the next append must not extend that line."""
+        try:
+            with open(self.path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                return f.read(1) != b"\n"
+        except (OSError, ValueError):   # absent or empty file
+            return False
 
 
 # ---------------------------------------------------------------------------

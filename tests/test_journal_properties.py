@@ -1,0 +1,134 @@
+"""Property tests: the sweep journal never loses a committed entry.
+
+Hypothesis drives arbitrary interleavings of the failure modes a
+long-running sweep actually sees — chunk appends, kill -9 mid-append
+(a torn, newline-less tail), process restarts (fresh SweepJournal
+instances against the same file) — and asserts, after every sequence:
+
+  * every committed (fully appended) entry is still loaded, with the
+    last-written time winning;
+  * ``entries()`` never double-counts a config, no matter how many
+    concurrent-writer-style duplicate appends happened;
+  * foreign headers are never silently resumed: a workload/objective
+    mismatch raises, a headerless/torn-header journal is quarantined.
+
+Run with ``HYPOTHESIS_PROFILE=ci`` (registered in tests/conftest.py) for
+a fixed derandomized seed and no deadline — deterministic in CI.
+"""
+import os
+import tempfile
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import TPUCostModelObjective, Workload, build_space
+from repro.tuning.sweep import SweepJournal, config_key
+
+WL = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+OTHER_WL = Workload(op="fft", n=512, batch=2**14, variant="stockham")
+OBJ = TPUCostModelObjective()
+SPACE = build_space(WL)
+CONFIGS = SPACE.enumerate_valid()[:16]
+SPACE_SIZE = len(SPACE.enumerate_valid())
+
+# an op is one of:
+#   ("append", [(config_index, time), ...])  — a committed chunk append
+#   ("tear",)                                — kill -9 mid-write: torn tail
+#   ("reopen",)                              — process restart: new instance
+_entry = st.tuples(st.integers(0, len(CONFIGS) - 1),
+                   st.floats(1e-6, 1e-2, allow_nan=False))
+_op = st.one_of(
+    st.tuples(st.just("append"), st.lists(_entry, min_size=1, max_size=5)),
+    st.tuples(st.just("tear")),
+    st.tuples(st.just("reopen")),
+)
+
+
+def _apply(journal, path, committed, op):
+    kind = op[0]
+    if kind == "append":
+        entries = [(CONFIGS[i], t) for i, t in op[1]]
+        journal.append(WL, OBJ, SPACE_SIZE, entries)
+        for cfg, t in entries:
+            committed[config_key(cfg)] = float(t)
+        return journal
+    if kind == "tear":
+        with open(path, "a") as f:
+            f.write('{"k": "torn-mid-wri')       # no newline: a torn tail
+        return journal
+    return SweepJournal(path)                    # reopen
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(_op, min_size=1, max_size=12))
+def test_committed_entries_survive_any_interleaving(ops):
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "journal.jsonl")
+        journal = SweepJournal(path)
+        committed = {}
+        for op in ops:
+            journal = _apply(journal, path, committed, op)
+        loaded = journal.load(WL, OBJ)
+        assert loaded == committed, \
+            "a committed entry was lost or corrupted by the interleaving"
+        # a restart sees the same state
+        assert SweepJournal(path).load(WL, OBJ) == committed
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(_op, min_size=1, max_size=12))
+def test_entries_never_double_count_after_dedup(ops):
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "journal.jsonl")
+        journal = SweepJournal(path)
+        committed = {}
+        for op in ops:
+            journal = _apply(journal, path, committed, op)
+        pairs = SweepJournal(path).entries()
+        keys = [config_key(cfg) for cfg, _ in pairs]
+        assert len(keys) == len(set(keys)), "entries() double-counted"
+        assert {k: t for k, t in
+                zip(keys, (t for _, t in pairs))} == committed
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(_entry, min_size=1, max_size=6),
+       st.booleans())
+def test_foreign_headers_always_rejected(entries, wrong_objective):
+    """A journal written under a different workload or objective must
+    raise on load — silently resuming foreign numbers corrupts optima."""
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "journal.jsonl")
+        journal = SweepJournal(path)
+        journal.append(WL, OBJ, SPACE_SIZE,
+                       [(CONFIGS[i], t) for i, t in entries])
+        if wrong_objective:
+            with pytest.raises(ValueError, match="objective"):
+                journal.load(WL, TPUCostModelObjective(noise=0.5))
+        else:
+            with pytest.raises(ValueError, match="workload"):
+                journal.load(OTHER_WL, OBJ)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.text(alphabet="abc{}\": ,0123456789", min_size=0, max_size=40))
+def test_headerless_garbage_quarantined_not_resumed(garbage):
+    """Whatever bytes land in a journal without a parseable header, a
+    validated load must quarantine the file and return nothing."""
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "journal.jsonl")
+        with open(path, "w") as f:
+            f.write(garbage)
+        journal = SweepJournal(path)
+        header = journal.read_header()
+        if header is not None:
+            return                      # the garbage parsed as a header
+        loaded = journal.load(WL, OBJ)
+        assert loaded == {}
+        if garbage.strip():
+            assert os.path.exists(path + ".corrupt"), \
+                "unvalidatable bytes must be quarantined, not left live"
+            assert not os.path.exists(path)

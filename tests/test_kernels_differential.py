@@ -1,0 +1,66 @@
+"""Differential kernel-vs-reference suite over dtype x odd/prime shapes.
+
+The case table lives in ``tests/conftest.py`` (one row per
+``kernels/*/ops.py`` entry point); ``pytest_generate_tests`` fans it out.
+Each case runs the *public* entry with ``config=None`` — the full
+session-resolution pipeline (analytical prior -> per-op normalizer ->
+launch-geometry fitting) has to survive shapes the tuner never saw:
+prime batches, non-power-of-two lengths.
+"""
+import pytest
+from conftest import kernel_ops_entries
+
+
+def test_kernel_matches_reference(kernel_case):
+    kernel_case()
+
+
+def test_table_covers_every_registered_kernel():
+    """Adding a @tuned_kernel entry point without a differential-table row
+    must fail here — coverage is opt-out-proof, like known_ops() for the
+    ML suite."""
+    from repro.tuning import registered_kernels
+    from repro.tuning.registry import _OP_MODULES, _ensure_registered
+
+    for op in _OP_MODULES:
+        _ensure_registered(op)
+    registered = set()
+    for name, spec in registered_kernels().items():
+        registered.add(spec.entry_name)
+    covered = set(kernel_ops_entries())
+    # tridiag's one entry point (solve) is table-covered per variant;
+    # fft's ifft is the same kernel inverted (roundtrip-tested in
+    # test_kernels_fft.py)
+    aliases = {"solve": {"solve_pcr", "solve_cr", "solve_lf", "solve_wm"},
+               "ifft": {"fft"}}
+    missing = []
+    for entry in registered:
+        names = aliases.get(entry, {entry})
+        if not names & covered:
+            missing.append(entry)
+    assert not missing, \
+        f"kernels/*/ops.py entry points without a differential case: {missing}"
+
+
+def test_odd_length_scan_space_is_empty():
+    """Pin the boundary the table respects: odd n has no valid radix
+    config — resolution must fail loudly, not silently mis-launch."""
+    from repro.core import Workload, build_space
+
+    space = build_space(Workload(op="scan", n=97, batch=4, variant="ks"))
+    assert space.enumerate_valid() == []
+
+
+def test_odd_batch_space_builds_after_floor_pow2_fix():
+    """Odd batches used to trip pow2_range's power-of-two assert inside
+    the space builders; a serve engine with 3 active slots is legal."""
+    from repro.core import Workload, build_space
+    from repro.core.space import floor_pow2
+
+    assert floor_pow2(1) == 1 and floor_pow2(7) == 4 and floor_pow2(8) == 8
+    for op, variant in (("scan", "ks"), ("tridiag", "pcr"),
+                        ("fft", "stockham")):
+        space = build_space(Workload(op=op, n=256, batch=3, variant=variant))
+        cands = space.enumerate_valid()
+        assert cands, f"{op}: no valid config for an odd batch"
+        assert all(c.get("rows_per_program", 1) == 1 for c in cands)

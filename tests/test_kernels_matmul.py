@@ -24,13 +24,5 @@ def test_matmul_block_sweep(m, k, n, bm, bn, bk):
     np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-4, atol=5e-4)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_matmul_dtypes(dtype):
-    a = jax.random.normal(KEY, (128, 128), dtype)
-    b = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 128), dtype)
-    got = matmul(a, b, config={"block_m": 128, "block_n": 128,
-                               "block_k": 128}, interpret=True)
-    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(matmul_ref(a, b), np.float32),
-                               rtol=tol, atol=tol * 20)
+# dtype x odd/prime-shape coverage moved to the shared differential suite
+# (tests/conftest.py KERNEL_CASES + test_kernels_differential.py)

@@ -31,15 +31,8 @@ def test_scan_add_matches_oracle(batch, n, rows, tile, radix, unroll):
     np.testing.assert_allclose(got, scan_add_ref(x), rtol=2e-5, atol=2e-4)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_scan_add_dtypes(dtype):
-    x = jnp.asarray(RNG.normal(size=(4, 256)), dtype)
-    got = scan_add_pallas(x, rows_per_program=2, tile_n=256, radix=2,
-                          interpret=True)
-    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(scan_add_ref(x), np.float32),
-                               rtol=tol, atol=tol * 10)
+# dtype x odd/prime-shape coverage moved to the shared differential suite
+# (tests/conftest.py KERNEL_CASES + test_kernels_differential.py)
 
 
 @pytest.mark.parametrize("batch,n,rows,tile,radix", [

@@ -1,0 +1,198 @@
+"""Conformance: every Objective subclass's batch_eval == a sequential
+__call__ loop, bit for bit.
+
+PR 3's sweep engine routes ALL exhaustive evaluation through
+``Objective.batch_eval``; the ground-truth optimum, the Phi denominators,
+and the ML training labels are only correct if the batched protocol is
+*exactly* the scalar protocol (valid -> time_s, invalid -> the penalty
+clamp).  This suite locks that invariant for every subclass in the repo —
+including ones whose batch_eval is the inherited default — and fails
+when a new subclass ships without a conformance factory, so future
+objectives (like the online wall-clock one this PR adds) cannot dodge it.
+
+Factories return FRESH (objective, space, configs) per call: the scalar
+loop and the batched pass each run on their own instance, so stateful
+objectives (caches) must agree from a cold start, not by replaying
+whatever the other path populated.
+"""
+import numpy as np
+import pytest
+
+from repro.core import TPUCostModelObjective, Workload, build_space
+from repro.core.objective import (CachedObjective, Objective, PENALTY_TIME,
+                                  WallClockObjective)
+
+RNG_SEED = 20260802
+
+
+def _iter_subclasses(cls):
+    for sub in cls.__subclasses__():
+        yield sub
+        yield from _iter_subclasses(sub)
+
+
+def _sample_configs(space, k=24, invalid=2, seed=RNG_SEED):
+    """Randomized mix of valid configs and invalid mutants."""
+    rng = np.random.default_rng(seed)
+    cands = space.enumerate_valid()
+    idx = rng.permutation(len(cands))[:k]
+    cfgs = [dict(cands[int(i)]) for i in idx]
+    for j in range(min(invalid, len(cfgs))):
+        bad = dict(cfgs[j])
+        knob = sorted(bad)[j % len(bad)]
+        bad[knob] = 999                      # outside every domain
+        cfgs.append(bad)
+    return cfgs
+
+
+# ---------------------------------------------------------------------------
+# Factories: name -> () -> (objective, space, configs)
+# ---------------------------------------------------------------------------
+
+def _tpu_cost_model():
+    space = build_space(Workload(op="scan", n=512, batch=2**17, variant="lf"))
+    return TPUCostModelObjective(noise=0.02), space, _sample_configs(space)
+
+
+def _cached():
+    space = build_space(Workload(op="fft", n=256, batch=2**14,
+                                 variant="stockham"))
+    obj = CachedObjective(TPUCostModelObjective(noise=0.02))
+    # duplicates: the batch path must answer repeats from its cache with
+    # the identical measurement the scalar loop would re-read
+    cfgs = _sample_configs(space, k=12)
+    return obj, space, cfgs + cfgs[:4]
+
+
+def _wallclock():
+    """Deterministic wall clock: the runner's thunk advances the fake
+    clock by a config-derived amount, so both the scalar loop and the
+    batched walk measure exactly that per-config duration."""
+    space = build_space(Workload(op="tridiag", n=128, batch=8,
+                                 variant="pcr"))
+
+    class FakeClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = FakeClock()
+
+    def runner(wl, cfg):
+        dt = 1e-6 * (1.0 + sum(cfg.values()) % 97)
+
+        def thunk():
+            clock.t += dt
+        return thunk
+
+    obj = WallClockObjective(runner, reps=3, warmup=1)
+    obj._fake_clock = clock                      # picked up by the test
+    return obj, space, _sample_configs(space, k=10)
+
+
+def _online_wallclock():
+    from repro.tuning.online import OnlineWallClockObjective
+    from repro.tuning.sweep import config_key
+
+    space = build_space(Workload(op="scan", n=256, batch=2**18,
+                                 variant="ks"))
+    cfgs = _sample_configs(space, k=16)
+    rng = np.random.default_rng(RNG_SEED + 1)
+    times = {}
+    for cfg in cfgs[:10]:                        # the rest: never measured
+        times[config_key(cfg)] = list(rng.uniform(1e-4, 1e-2, size=5))
+    return OnlineWallClockObjective(times, source="conformance"), space, cfgs
+
+
+def _multipass():
+    from repro.core.multikernel import MultiPassObjective
+
+    space = build_space(Workload(op="large_fft", n=2**20, batch=64,
+                                 variant="stockham"))
+    return MultiPassObjective(), space, _sample_configs(space, k=12)
+
+
+def _compiled_roofline():
+    from repro.core.distributed_tuning import (CompiledRooflineObjective,
+                                               distributed_space)
+
+    space = distributed_space("qwen1.5-0.5b", "train_4k")
+    # two valid configs only: each evaluation lowers and compiles a cell
+    cfgs = _sample_configs(space, k=2, invalid=0)
+    return CompiledRooflineObjective(), space, cfgs
+
+
+FACTORIES = {
+    "TPUCostModelObjective": _tpu_cost_model,
+    "CachedObjective": _cached,
+    "WallClockObjective": _wallclock,
+    "OnlineWallClockObjective": _online_wallclock,
+    "MultiPassObjective": _multipass,
+    "CompiledRooflineObjective": _compiled_roofline,
+}
+
+
+def test_every_repro_objective_subclass_has_a_factory():
+    """New Objective subclasses must register a conformance factory."""
+    # import every module that defines objectives so discovery is complete
+    import repro.core.distributed_tuning   # noqa: F401
+    import repro.core.multikernel          # noqa: F401
+    import repro.core.objective            # noqa: F401
+    import repro.tuning.online             # noqa: F401
+
+    missing = sorted(
+        cls.__name__ for cls in _iter_subclasses(Objective)
+        if cls.__module__.startswith("repro")
+        and cls.__name__ not in FACTORIES)
+    assert not missing, \
+        f"Objective subclasses without a conformance factory: {missing} — " \
+        f"add one to tests/test_objective_conformance.py::FACTORIES"
+
+
+@pytest.mark.parametrize("name", sorted(FACTORIES))
+def test_batch_eval_bit_identical_to_sequential_loop(name, monkeypatch):
+    import time as time_mod
+
+    factory = FACTORIES[name]
+
+    def measure_scalar():
+        obj, space, cfgs = factory()
+        if hasattr(obj, "_fake_clock"):
+            monkeypatch.setattr(time_mod, "perf_counter", obj._fake_clock)
+        out = np.empty(len(cfgs))
+        for i, cfg in enumerate(cfgs):
+            m = obj(space, cfg)
+            out[i] = m.time_s if m.valid else PENALTY_TIME
+        return out
+
+    def measure_batched():
+        obj, space, cfgs = factory()
+        if hasattr(obj, "_fake_clock"):
+            monkeypatch.setattr(time_mod, "perf_counter", obj._fake_clock)
+        return obj.batch_eval(space, cfgs)
+
+    seq = measure_scalar()
+    batched = measure_batched()
+    assert batched.dtype == np.float64 and len(batched) == len(seq)
+    assert np.array_equal(seq, batched), \
+        f"{name}: batch_eval diverged from the sequential loop at " \
+        f"{np.flatnonzero(seq != batched)[:5]}"
+
+
+@pytest.mark.parametrize("name", sorted(FACTORIES))
+def test_batch_eval_empty_candidate_set(name):
+    obj, space, _ = FACTORIES[name]()
+    out = obj.batch_eval(space, [])
+    assert len(out) == 0
+
+
+def test_signature_distinguishes_parameterizations():
+    """Same-class objectives with different measurement parameters must
+    not share a journal identity (the resume-corruption vector)."""
+    from repro.tuning.online import OnlineWallClockObjective
+
+    assert TPUCostModelObjective(noise=0.0).signature() \
+        != TPUCostModelObjective(noise=0.5).signature()
+    assert OnlineWallClockObjective({}, source="serve").signature() \
+        != OnlineWallClockObjective({}, source="replay").signature()

@@ -1,0 +1,365 @@
+"""Online tuning subsystem: EWMA measurement, trial/rollback state machine,
+deterministic trace replay, TuningDB/journal persistence, strategy row."""
+import numpy as np
+import pytest
+
+from repro.core import TPUCostModelObjective, Workload, build_space
+from repro.core.objective import CachedObjective, PENALTY_TIME
+from repro.tuning import (OnlineTuner, ReplayTrace, TunerSession,
+                          online_search, replay)
+from repro.tuning.online import (EwmaTracker, INCUMBENT, ROLLED_BACK,
+                                 ranked_candidates)
+from repro.tuning.sweep import SweepJournal, config_key
+
+WL = Workload(op="scan", n=512, batch=2**17, variant="lf")
+
+
+def _trace_with_best(session, *, prior_ms=2.0, best_ms=1.0, other_ms=2.4,
+                     best_rank=3, top_k=8, jitter=0.0, seed=0):
+    """Recorded trace where the prior is prior_ms/best_ms x slower than the
+    best candidate (the acceptance premise); returns (trace, prior, best)."""
+    space = build_space(WL)
+    prior = session.resolve_raw(WL)
+    cands = ranked_candidates(space, top_k, exclude=(config_key(prior),))
+    best = cands[best_rank]
+    rng = np.random.default_rng(seed)
+    trace = ReplayTrace(WL, source="test")
+
+    def times(ms):
+        base = ms * 1e-3
+        if not jitter:
+            return [base] * 40
+        return list(base * (1.0 + jitter * rng.uniform(-1, 1, size=40)))
+
+    for t in times(prior_ms):
+        trace.add(prior, t)
+    for i, cfg in enumerate(cands):
+        for t in times(best_ms if i == best_rank else other_ms):
+            trace.add(cfg, t)
+    return trace, prior, best
+
+
+# ---------------------------------------------------------------------------
+# EWMA measurement
+# ---------------------------------------------------------------------------
+
+def test_ewma_clips_outliers():
+    tr = EwmaTracker(alpha=0.25, clip=4.0)
+    tr.observe(1.0)
+    tr.observe(1000.0)                    # GC pause / preemption spike
+    assert tr.clipped == 1
+    assert tr.value <= 1.0 * (1 - 0.25) + 4.0 * 0.25 + 1e-12
+    for _ in range(20):
+        tr.observe(1.0)
+    assert abs(tr.value - 1.0) < 0.05     # recovers fast
+
+    with pytest.raises(ValueError, match="alpha"):
+        EwmaTracker(alpha=0.0)
+    with pytest.raises(ValueError, match="clip"):
+        EwmaTracker(clip=1.0)
+
+
+def test_first_trial_sample_clipped_against_incumbent_hint(tmp_path):
+    """A startup spike on a trial's FIRST step must not kill the config:
+    the tracker clips it against the incumbent's EWMA baseline."""
+    tr = EwmaTracker(alpha=0.25, clip=4.0, hint=1e-3)
+    tr.observe(1.0)                       # 1000x preemption spike, step one
+    assert tr.clipped == 1 and tr.value <= 4e-3
+
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    prior = session.resolve_raw(WL)
+    space = build_space(WL)
+    best = ranked_candidates(space, 1, exclude=(config_key(prior),))[0]
+    trace = ReplayTrace(WL, source="test")
+    for _ in range(30):
+        trace.add(prior, 2e-3)
+    trace.add(best, 2.0)                  # spike exactly on the first sample
+    for _ in range(30):
+        trace.add(best, 1e-3)
+    tuner = OnlineTuner(WL, session, prior=prior, candidates=[best],
+                        budget=32, store=False)
+    res = replay(tuner, trace)
+    assert res.best_config == best        # survived its noisy first step
+
+
+def test_history_includes_demoted_prior(tmp_path):
+    """After a promotion the original prior's measured EWMA must still be
+    reported — every config that informed a decision shows up."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    trace, prior, best = _trace_with_best(session)
+    tuner = OnlineTuner(WL, session, budget=64, store=False)
+    res = replay(tuner, trace)
+    assert res.best_config == best
+    keys = {config_key(c) for c, _ in res.history}
+    assert config_key(prior) in keys and config_key(best) in keys
+
+
+def test_ewma_constant_stream_is_exact():
+    """Deterministic samples collapse to the sample exactly (alpha=0.25 is
+    fp-exact), so the compare report scores online on measured numbers."""
+    tr = EwmaTracker(alpha=0.25)
+    for _ in range(10):
+        tr.observe(3.14159e-3)
+    assert tr.value == 3.14159e-3
+
+
+# ---------------------------------------------------------------------------
+# Replay: convergence, guard band, persistence (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_replay_converges_from_2x_slower_prior(tmp_path):
+    """Prior 2x slower than the best recorded config: the tuner must find
+    the best within its budget, persist it to the TuningDB, and journal
+    the production EWMAs."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    trace, prior, best = _trace_with_best(session, jitter=0.05)
+    tuner = OnlineTuner(WL, session, budget=64, guard_band=0.25,
+                        journal_dir=str(tmp_path / "journals"),
+                        source="test")
+    res = replay(tuner, trace)
+    assert res.best_config == best
+    assert tuner.promotions >= 1
+    assert res.evaluations <= 64                  # strict measurement budget
+    assert res.stopped_by in ("budget", "exhausted")
+    # winner persisted: the serve path resolves it from here on
+    assert session.lookup(WL) == best
+    entry = next(iter(session.db.entries().values()))
+    assert entry["method"] == "online"
+    # production EWMAs journaled under the online objective identity
+    journals = list((tmp_path / "journals").glob("*.jsonl"))
+    assert len(journals) == 1
+    journal = SweepJournal(str(journals[0]))
+    header = journal.read_header()
+    assert header["objective"] == "online_wallclock:test"
+    assert header["pruned"] > 0                   # partial: not trainable yet
+    keys = {config_key(cfg) for cfg, _ in journal.entries()}
+    assert config_key(best) in keys and config_key(prior) in keys
+
+
+def test_replay_never_exceeds_guard_band_mid_run(tmp_path):
+    """A believed trial (>= min_samples) may never sit beyond the guard
+    band: the violation step is the rollback step."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    trace, prior, best = _trace_with_best(session, other_ms=5.0,
+                                          jitter=0.05)
+    tuner = OnlineTuner(WL, session, budget=64, guard_band=0.25,
+                        min_samples=3, store=False)
+    cursors = {}
+    while not tuner.finished and tuner.steps < 10_000:
+        key = config_key(tuner.config())
+        ts = trace.times.get(key, [PENALTY_TIME])
+        t = ts[cursors.get(key, 0) % len(ts)]
+        cursors[key] = cursors.get(key, 0) + 1
+        tuner.observe(t)
+        if tuner.trial is not None and tuner.trial.samples >= 3:
+            guard = tuner.incumbent.tracker.value * 1.25
+            assert tuner.trial.ewma <= guard + 1e-12, \
+                "a trial beyond the guard band survived its decision step"
+    # the 5x-slower candidates must have died early, at min_samples
+    for rec in tuner.trials:
+        if rec.state == ROLLED_BACK and rec.ewma > rec.baseline * 1.25:
+            assert rec.samples <= 3
+
+
+def test_replay_is_deterministic(tmp_path):
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    trace, _, _ = _trace_with_best(session, jitter=0.1)
+
+    def run():
+        tuner = OnlineTuner(WL, session, budget=48, store=False)
+        res = replay(tuner, trace)
+        return (res.best_config, res.best_time, res.stopped_by,
+                [(t.key, t.state, t.samples) for t in tuner.trials])
+
+    assert run() == run()
+
+
+def test_unrecorded_candidate_rolls_back_on_penalty(tmp_path):
+    """A config the trace never measured answers with the penalty clamp
+    and must die at min_samples, not poison the incumbent."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    space = build_space(WL)
+    prior = session.resolve_raw(WL)
+    ghost = ranked_candidates(space, 1, exclude=(config_key(prior),))[0]
+    trace = ReplayTrace(WL, source="test")
+    for _ in range(20):
+        trace.add(prior, 1e-3)
+    tuner = OnlineTuner(WL, session, prior=prior, candidates=[ghost],
+                        budget=16, min_samples=2, store=False)
+    res = replay(tuner, trace)
+    assert res.best_config == prior               # incumbent survived
+    assert tuner.trials[0].state == ROLLED_BACK
+    assert tuner.trials[0].samples == 2
+
+
+def test_stopped_by_budget_vs_exhausted(tmp_path):
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    trace, _, _ = _trace_with_best(session, top_k=4)
+    tight = OnlineTuner(WL, session, budget=5, samples_per_trial=4,
+                        min_samples=2, store=False)
+    assert replay(tight, trace).stopped_by == "budget"
+    assert tight.measured <= 5
+    roomy = OnlineTuner(WL, session, budget=500, top_k=4, store=False)
+    assert replay(roomy, trace).stopped_by == "exhausted"
+    assert len(roomy.trials) >= 4                 # every candidate trialed
+
+
+def test_promotion_requires_strict_win(tmp_path):
+    """Identical latencies must not churn the incumbent."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    prior = session.resolve_raw(WL)
+    space = build_space(WL)
+    cands = ranked_candidates(space, 3, exclude=(config_key(prior),))
+    trace = ReplayTrace(WL, source="test")
+    for cfg in [prior] + cands:
+        for _ in range(30):
+            trace.add(cfg, 1e-3)
+    tuner = OnlineTuner(WL, session, budget=200, top_k=3, store=False)
+    res = replay(tuner, trace)
+    assert tuner.promotions == 0
+    assert res.best_config == prior
+
+
+def test_tuner_parameter_validation(tmp_path):
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    with pytest.raises(ValueError, match="budget"):
+        OnlineTuner(WL, session, budget=0)
+    with pytest.raises(ValueError, match="guard_band"):
+        OnlineTuner(WL, session, guard_band=0.0)
+    with pytest.raises(ValueError, match="samples_per_trial"):
+        OnlineTuner(WL, session, min_samples=5, samples_per_trial=2)
+
+
+def test_ranked_candidates_exclude_and_order():
+    space = build_space(WL)
+    all_ranked = ranked_candidates(space, 10)
+    assert len(all_ranked) == 10
+    head = config_key(all_ranked[0])
+    without = ranked_candidates(space, 10, exclude=(head,))
+    assert all(config_key(c) != head for c in without)
+    assert [config_key(c) for c in without[:9]] \
+        == [config_key(c) for c in all_ranked[1:10]]
+
+
+# ---------------------------------------------------------------------------
+# Traces
+# ---------------------------------------------------------------------------
+
+def test_replay_candidates_keep_low_ranked_recorded_configs():
+    """The trace's measured winner may rank poorly analytically; replay
+    candidate selection must rank the recorded set, never filter it."""
+    from repro.tuning.online import replay_candidates
+
+    space = build_space(WL)
+    ranked = ranked_candidates(space, top_k=space.size())
+    prior, low = ranked[0], ranked[-1]            # worst-ranked valid config
+    trace = ReplayTrace(WL, source="test")
+    trace.add(prior, 2e-3)
+    trace.add(ranked[1], 1.8e-3)
+    trace.add(low, 1e-3)                          # ...and it's the fastest
+    cands = replay_candidates(space, trace, prior)
+    keys = [config_key(c) for c in cands]
+    assert config_key(low) in keys                # not truncated away
+    assert config_key(prior) not in keys
+    assert keys[0] == config_key(ranked[1])       # still expert-ordered
+
+    # end to end: replay converges to the low-ranked recorded winner
+    for _ in range(30):
+        trace.add(prior, 2e-3)
+        trace.add(ranked[1], 1.8e-3)
+        trace.add(low, 1e-3)
+    tuner = OnlineTuner(WL, session=None, prior=prior, candidates=cands,
+                        budget=64, store=False)
+    assert replay(tuner, trace).best_config == low
+
+
+def test_trace_roundtrip_and_torn_tail(tmp_path):
+    trace = ReplayTrace(WL, source="roundtrip")
+    space = build_space(WL)
+    cfgs = space.enumerate_valid()[:3]
+    for i, cfg in enumerate(cfgs):
+        for j in range(4):
+            trace.add(cfg, 1e-3 * (i + 1) + 1e-6 * j)
+    path = str(tmp_path / "trace.jsonl")
+    trace.save(path)
+    with open(path, "a") as f:
+        f.write('{"k": "torn')                    # recorder killed mid-write
+    loaded = ReplayTrace.load(path)
+    assert loaded.workload == WL and loaded.source == "roundtrip"
+    assert loaded.times == trace.times
+    assert loaded.configs == trace.configs
+    with pytest.raises(ValueError, match="header"):
+        bad = str(tmp_path / "headerless.jsonl")
+        with open(bad, "w") as f:
+            f.write('{"k": "a", "cfg": {}, "t": 1.0}\n')
+        ReplayTrace.load(bad)
+
+    # two recording sessions cat'ed together must fail loudly, not
+    # silently replay only the second half
+    clean = str(tmp_path / "clean.jsonl")
+    trace.save(clean)
+    merged = str(tmp_path / "merged.jsonl")
+    with open(merged, "w") as f:
+        f.write(open(clean).read() + open(clean).read())
+    with pytest.raises(ValueError, match="multiple headers"):
+        ReplayTrace.load(merged)
+
+
+# ---------------------------------------------------------------------------
+# strategy="online" (the compare-report row)
+# ---------------------------------------------------------------------------
+
+def test_online_strategy_never_beats_exhaustive_and_reports_budget():
+    from repro.core.exhaustive import ExhaustiveSearch
+
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    space = build_space(wl)
+    obj = CachedObjective(TPUCostModelObjective(noise=0.02))
+    ex = ExhaustiveSearch().tune(space, obj)
+    res = online_search(space, obj, budget=16)
+    assert res.best_time >= ex.best_time - 1e-18
+    assert res.evaluations <= 16
+    assert res.stopped_by in ("budget", "exhausted")
+    assert space.is_valid(res.best_config)
+
+
+def test_online_strategy_through_session(tmp_path):
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    wl = Workload(op="tridiag", n=128, batch=2**13, variant="pcr")
+    res = session.tune(wl, method="online", max_evals=12)
+    assert res.stopped_by in ("budget", "exhausted")
+    assert session.lookup(wl) == res.best_config
+    entry = next(iter(session.db.entries().values()))
+    assert entry["method"] == "online"
+    # online winners are NOT exhaustive optima: the ML label exporter
+    # must skip them (same contract as "exhaustive-pruned")
+    from repro.tuning.ml.dataset import dataset_from_db
+    assert len(dataset_from_db(session.db)) == 0
+
+
+def test_online_in_compare_report():
+    from repro.evaluation import check_report, compare_methods
+
+    wls = [Workload(op="tridiag", n=128, batch=2**13, variant="pcr")]
+    report = compare_methods(
+        wls, methods=("analytical", "online"),
+        objective_factory=lambda: TPUCostModelObjective(noise=0.02),
+        seed=0, max_evals=10)
+    assert check_report(report) == []
+    row = report["workloads"][0]["methods"]["online"]
+    assert row["slowdown"] >= 1.0 - 1e-9
+    assert row["stopped_by"] in ("budget", "exhausted")
+
+
+def test_incumbent_state_transitions(tmp_path):
+    """Promoted trial becomes the incumbent; the demoted incumbent is
+    recorded as rolled back — states stay consistent mid-flight."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    trace, prior, best = _trace_with_best(session)
+    tuner = OnlineTuner(WL, session, budget=64, store=False)
+    assert tuner.state() == INCUMBENT
+    replay(tuner, trace)
+    assert tuner.incumbent.state == INCUMBENT
+    assert tuner.incumbent.config == best
+    promoted = [t for t in tuner.trials if t.state == INCUMBENT]
+    assert promoted and promoted[-1] is tuner.incumbent

@@ -227,6 +227,43 @@ def test_headerless_journal_quarantined_not_resumed(tmp_path):
     assert fresh.read_header() is not None      # healed with a real header
 
 
+def test_append_after_torn_tail_does_not_glue(tmp_path):
+    """A crash-resumed journal ends mid-line; the next append used to
+    concatenate its first record onto the torn bytes, losing BOTH to the
+    json parse. The writer must terminate the torn line first."""
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    obj = TPUCostModelObjective()
+    space = build_space(wl)
+    cands = space.enumerate_valid()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    journal.append(wl, obj, len(cands), [(cands[0], 1.0)])
+    with open(journal.path, "a") as f:
+        f.write('{"k": "torn-mid-wri')           # kill -9 mid-append
+    resumed = SweepJournal(journal.path)         # fresh process
+    resumed.append(wl, obj, len(cands), [(cands[1], 2.0)])
+    done = resumed.load(wl, obj)
+    from repro.tuning.sweep import config_key
+    assert done[config_key(cands[0])] == 1.0
+    assert done[config_key(cands[1])] == 2.0     # survived the torn tail
+    assert len(done) == 2
+
+
+def test_journal_nondict_json_lines_skipped(tmp_path):
+    """Valid-JSON-but-not-an-object lines (e.g. '123') must be treated as
+    noise, not crash load()/read_header()/entries()."""
+    wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
+    obj = TPUCostModelObjective()
+    journal = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    with open(journal.path, "w") as f:
+        f.write("123\n")
+    assert journal.read_header() is None
+    assert journal.load(wl, obj) == {}           # quarantined, not crashed
+    fresh = SweepJournal.for_workload(str(tmp_path), wl, obj)
+    space = build_space(wl)
+    fresh.append(wl, obj, space.size(), [(space.enumerate_valid()[0], 1.0)])
+    assert len(fresh.entries()) == 1
+
+
 def test_journal_survives_torn_trailing_line(tmp_path):
     wl = Workload(op="fft", n=256, batch=2**14, variant="stockham")
     obj = TPUCostModelObjective()
