@@ -1,0 +1,115 @@
+"""Micro-benchmark: StagePlan construction + plan-aware resolve/dispatch.
+
+The building-block refactor inserted a planner between config resolution
+and kernel launch; this bench gates the two acceptance criteria:
+
+  (a) warm plan construction (the memoized ``plan_for`` hit every kernel
+      call pays) stays under 50 us;
+  (b) the refactored resolve+plan hot path is no slower than the
+      pre-refactor bench_resolve bar: still >= 10x faster than the
+      seed-style miss path (re-running the analytical model per call).
+
+Emits CSV rows (name,metric,value); ``--json`` writes BENCH_BLOCKS.json
+for the CI bench-smoke artifact trail.
+
+    PYTHONPATH=src python benchmarks/bench_blocks.py --json BENCH_BLOCKS.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+from repro.core import Workload, build_space
+from repro.core.analytical import AnalyticalTuner
+from repro.core.space import normalize_config
+from repro.kernels.blocks.plan import build_plan, plan_for
+from repro.tuning import TunerSession
+
+WORKLOADS = [
+    Workload(op="scan", n=512, batch=2**17, variant="lf"),
+    Workload(op="scan", n=4096, batch=2**14, variant="linrec"),
+    Workload(op="tridiag", n=256, batch=2**14, variant="wm"),
+    Workload(op="fft", n=1024, batch=2**12, variant="stockham"),
+    Workload(op="large_fft", n=2**20, batch=16, variant="stockham"),
+]
+
+PLAN_WARM_BUDGET_US = 50.0
+
+
+def timeit(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(emit) -> dict:
+    session = TunerSession(db_path=tempfile.mktemp(suffix="_bench_db.json"))
+    worst_speedup = float("inf")
+    worst_plan_us = 0.0
+    for wl in WORKLOADS:
+        tuner = AnalyticalTuner()
+
+        def miss_path(wl=wl, tuner=tuner):
+            cfg = tuner.suggest(build_space(wl))
+            return normalize_config(cfg, wl)
+
+        cfg = session.resolve(wl)                # prime LRU + plan cache
+        plan_for(wl, cfg)
+
+        def hot_path(wl=wl):
+            c = session.resolve(wl)
+            return plan_for(wl, c)
+
+        t_cold_plan = timeit(lambda wl=wl, cfg=cfg: build_plan(wl, cfg), 20)
+        t_warm_plan = timeit(lambda wl=wl, cfg=cfg: plan_for(wl, cfg), 2000)
+        t_miss = timeit(miss_path, 5)
+        t_hot = timeit(hot_path, 500)
+        speedup = t_miss / max(t_hot, 1e-12)
+        worst_speedup = min(worst_speedup, speedup)
+        worst_plan_us = max(worst_plan_us, t_warm_plan * 1e6)
+        tag = f"{wl.op}:{wl.variant}"
+        emit(f"blocks,{tag},plan_cold_us,{t_cold_plan*1e6:.1f}")
+        emit(f"blocks,{tag},plan_warm_us,{t_warm_plan*1e6:.3f}")
+        emit(f"blocks,{tag},resolve_plan_us,{t_hot*1e6:.2f}")
+        emit(f"blocks,{tag},miss_us,{t_miss*1e6:.1f}")
+        emit(f"blocks,{tag},speedup_vs_miss,{speedup:.0f}")
+    return {"worst_speedup": worst_speedup, "worst_plan_warm_us": worst_plan_us}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_BLOCKS.json summary")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="accepted for CLI uniformity; deterministic bench")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="record without gating (noisy shared CI runners)")
+    args = ap.parse_args()
+    rows = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    summary = run(emit)
+    if not args.no_assert:
+        assert summary["worst_plan_warm_us"] < PLAN_WARM_BUDGET_US, \
+            f"warm plan construction {summary['worst_plan_warm_us']:.1f}us " \
+            f">= {PLAN_WARM_BUDGET_US}us"
+        assert summary["worst_speedup"] >= 10, \
+            f"resolve+plan only {summary['worst_speedup']:.1f}x faster " \
+            f"than the miss path (pre-refactor bar: 10x)"
+        print(f"# acceptance ok: plan warm {summary['worst_plan_warm_us']:.2f}us, "
+              f"resolve+plan {summary['worst_speedup']:.0f}x over miss path")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "blocks", "seed": args.seed, "rows": rows,
+                       "summary": summary}, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Prints ``name,...`` CSV rows:
   fig4 / fig4d        — BO candidate-evaluation counts (+ control vs random);
   roofline            — per (arch x shape) three-term roofline summary;
   resolve             — TunerSession online hot-path vs seed miss path;
+  blocks              — StagePlan construction + plan-aware resolve path;
   sweep               — vectorized sweep engine vs seed per-config loop;
   ml_predict          — learned-predictor rank latency + holdout accuracy;
   online              — OnlineTuner per-decode-step overhead vs untimed.
@@ -28,7 +29,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
-                         "resolve,sweep,ml_predict,online")
+                         "resolve,blocks,sweep,ml_predict,online")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -66,6 +67,9 @@ def main() -> None:
     if begin("resolve"):
         from benchmarks.bench_resolve import run as run_resolve
         run_resolve(emit)
+    if begin("blocks"):
+        from benchmarks.bench_blocks import run as run_blocks
+        run_blocks(emit)
     if begin("sweep"):
         from benchmarks.bench_sweep import run as run_sweep_bench
         run_sweep_bench(emit)

@@ -21,8 +21,6 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.space import Config, SearchSpace, Workload
-from repro.hw.tpu import (V5E, effective_element_bytes, lane_utilization,
-                          sublane_utilization)
 
 OVERLAP_GRID = 4          # grid programs needed for full DMA/compute overlap
 OCCUPANCY_BAND = (0.60, 1.00)
@@ -34,6 +32,9 @@ class AnalyticalScore:
     pass_rank: float       # paper §IV-C premise: minimize the number of
     #                        passes/kernels FIRST (each extra pass is a full
     #                        HBM roundtrip) — ranks above the radix choice
+    seq_rank: float        # TPU twist on the same premise: a fused carry
+    #                        chain serializes its column tiles, so fewer
+    #                        sequential tiles rank next
     radix_rank: float      # rule 4
     block_rank: float      # TPU adaptation of the paper's Ba maximization:
     #                        once >= OVERLAP_GRID programs keep the pipeline
@@ -43,63 +44,27 @@ class AnalyticalScore:
     ilp_rank: float
 
     def key(self) -> Tuple:
-        # Lexicographic: tier, then pass count (§IV-C), then radix (rule 4
-        # overrides block choice), then the tier-specific objective, then
-        # ILP tie-break.
-        return (self.tier, self.pass_rank, self.radix_rank, self.block_rank,
-                self.occupancy, self.ilp_rank)
-
-
-def _resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
-    wl = space.workload
-    spec = space.spec
-    eb = effective_element_bytes(wl.op, wl.dtype)
-
-    if wl.op == "attention":
-        grid = max(wl.batch, 1) * max(wl.n // cfg["block_q"], 1)
-        vmem = (cfg["block_q"] + 2 * cfg["block_k"]) * 128 * eb * 2
-        occ = lane_utilization(cfg["block_k"], spec)
-        ilp = cfg.get("unroll", 1)
-        radix = 2
-        passes = 1.0
-        block_bytes = vmem // 2
-    elif wl.op == "matmul":
-        grid = max(wl.batch // cfg["block_m"], 1) * max(wl.n // cfg["block_n"], 1)
-        vmem = (cfg["block_m"] * cfg["block_k"] + cfg["block_k"] * cfg["block_n"]) * eb * 2
-        occ = min(cfg["block_n"] / spec.mxu_dim, 1.0) * min(cfg["block_m"] / spec.mxu_dim, 1.0)
-        ilp = cfg["block_k"] // 128
-        radix = 2
-        passes = 1.0
-        block_bytes = vmem // 2
-    else:
-        tile_n = cfg.get("tile_n", wl.n)
-        rows = cfg.get("rows_per_program", 1)
-        grid = max(max(wl.batch, 1) // rows, 1) * max(wl.n // tile_n, 1)
-        vmem = rows * tile_n * eb * 2
-        trailing = min(tile_n, spec.lane_count * spec.sublane_count)
-        occ = lane_utilization(trailing, spec)
-        # sublane packing of stacked rows also contributes (8-deep VREGs)
-        occ *= max(sublane_utilization(rows, spec), 0.5)
-        ilp = cfg.get("unroll", 1) * (2 if cfg.get("in_register") else 1)
-        radix = cfg.get("radix", 2)
-        passes = max(1.0, math.ceil(math.log(max(wl.n, 2), radix) /
-                                    max(math.log(max(tile_n, 2), radix), 1e-9)))
-        block_bytes = rows * tile_n * eb
-    return {"grid": grid, "vmem": vmem, "occupancy": min(occ, 1.0),
-            "ilp": ilp, "radix": radix, "passes": passes,
-            "block_bytes": block_bytes}
+        # Lexicographic: tier, then pass count (§IV-C), then carry-chain
+        # depth, then radix (rule 4 overrides block choice), then the
+        # tier-specific objective, then ILP tie-break.
+        return (self.tier, self.pass_rank, self.seq_rank, self.radix_rank,
+                self.block_rank, self.occupancy, self.ilp_rank)
 
 
 def resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
     """Architectural resource accounting for one candidate config.
 
-    Public entry point for consumers that stack on the analytical model —
-    notably ``repro.tuning.ml.features``, which feeds these quantities
-    (grid depth, VMEM footprint, occupancy, ILP, pass count) to the
-    learned predictor so it reasons on top of the expert model instead of
-    re-deriving architecture from raw knobs.
+    Everything is read off the :class:`~repro.kernels.blocks.plan.StagePlan`
+    — the exact staged execution the kernel drivers will launch — so the
+    expert model and the kernels cannot disagree about pass counts, VMEM
+    footprints or stage structure.  Public entry point for consumers that
+    stack on the analytical model, notably ``repro.tuning.ml.features``.
     """
-    return _resources(space, cfg)
+    # late import: repro.core.__init__ -> analytical must not re-enter
+    # blocks.plan while the package is still initializing
+    from repro.kernels.blocks.plan import plan_for
+
+    return plan_for(space.workload, cfg, spec=space.spec).resources()
 
 
 def score(space: SearchSpace, cfg: Config,
@@ -107,7 +72,7 @@ def score(space: SearchSpace, cfg: Config,
     """Guideline score; pass ``res`` from :func:`resources` to avoid
     recomputing the accounting when the caller already has it."""
     if res is None:
-        res = _resources(space, cfg)
+        res = resources(space, cfg)
     spec = space.spec
     fits = res["vmem"] <= spec.vmem_budget
     full_overlap = res["grid"] >= OVERLAP_GRID and fits
@@ -124,15 +89,13 @@ def score(space: SearchSpace, cfg: Config,
         tier = 0
 
     # rule 4: larger radix preferred when it cuts passes/steps — but only
-    # radices that divide the tile exactly; a mixed-radix circuit needs an
-    # extra odd step and more synchronizations (the paper's own observation
-    # on WM's jagged performance), so the expert ranks every exact radix
-    # above every mixed one.
-    r = res["radix"]
-    tile = cfg.get("tile_n", space.workload.n)
-    k = round(math.log(max(tile, 2), r)) if r > 1 else 1
-    exact = 1 if r ** k == tile else 0
-    radix_rank = exact * 16.0 + math.log2(r)
+    # stage sequences that stay at the nominal fan-in throughout; a ragged
+    # mixed-radix tail needs an extra odd step and more synchronizations
+    # (the paper's own observation on WM's jagged performance), so the
+    # expert ranks every exact radix above every mixed one.  The raggedness
+    # comes from the plan's actual stage sequence, not a re-derivation.
+    exact = 0 if res.get("ragged") else 1
+    radix_rank = exact * 16.0 + math.log2(max(res["radix"], 2))
     # TPU rule 1/2 objective: biggest DMA block that still leaves the
     # pipeline >= OVERLAP_GRID programs deep (saturating at 4 MiB, past
     # which the DMA ramp is flat).
@@ -140,7 +103,9 @@ def score(space: SearchSpace, cfg: Config,
         block_rank = math.log2(min(max(res["block_bytes"], 1), 4 * 2**20))
     else:
         block_rank = -1.0   # starves the pipeline: strictly worse
-    return AnalyticalScore(tier, -res["passes"], radix_rank, block_rank, occ,
+    return AnalyticalScore(tier, -res["passes"],
+                           -math.log2(max(res.get("seq_tiles", 1), 1)),
+                           radix_rank, block_rank, occ,
                            math.log2(max(res["ilp"], 1)))
 
 

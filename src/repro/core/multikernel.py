@@ -31,12 +31,11 @@ def num_passes(n: int, tile_n: int, radix: int = 2) -> int:
 
 def max_resident_tile(wl: Workload, spec=V5E) -> int:
     """Largest power-of-two tile whose double-buffered footprint fits VMEM
-    with at least one problem row per program."""
-    eb = dtype_bytes(wl.dtype) * (2 if wl.op in ("fft", "large_fft") else 1)
-    tile = 256
-    while tile * 2 * eb * 2 <= spec.vmem_budget and tile * 2 <= wl.n:
-        tile *= 2
-    return tile
+    with at least one problem row per program (delegates to the StagePlan
+    layer, which uses the same boundary to decide fused vs multi-pass)."""
+    from repro.kernels.blocks.plan import resident_tile_cap
+
+    return resident_tile_cap(wl, spec)
 
 
 @dataclasses.dataclass

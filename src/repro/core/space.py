@@ -216,11 +216,16 @@ def in_register_rule():
 def scan_space(wl: Workload) -> SearchSpace:
     eb = dtype_bytes(wl.dtype)
     max_rows = floor_pow2(min(512, max(wl.batch, 1)))
+    # variant-aware knob pruning: the linrec kernel's fold order is fixed
+    # by the (a, b) composition algebra, so sweeping `unroll` there only
+    # duplicated configs (inflated exhaustive sweeps, label noise in the
+    # ML dataset)
+    unroll_dom = (1,) if wl.variant == "linrec" else (1, 2, 4, 8)
     params = [
         ParamSpec("tile_n", tuple(v for v in pow2_range(128, max(wl.n, 128)) if v <= wl.n) or (wl.n,)),
         ParamSpec("rows_per_program", pow2_range(1, max_rows)),
         ParamSpec("radix", (2, 4, 8)),          # tree fan-in per level
-        ParamSpec("unroll", (1, 2, 4, 8)),      # node-ops per VPU step
+        ParamSpec("unroll", unroll_dom),        # node-ops per VPU step
         ParamSpec("in_register", (0, 1)),
     ]
     return SearchSpace(
@@ -236,17 +241,38 @@ def scan_space(wl: Workload) -> SearchSpace:
     )
 
 
+def linrec_space(wl: Workload) -> SearchSpace:
+    """Scan space with the linrec-dead knobs pruned (rglru & friends)."""
+    return scan_space(dataclasses.replace(wl, variant=wl.variant or "linrec"))
+
+
 def tridiag_space(wl: Workload) -> SearchSpace:
     # each element is an equation: 4 coefficients (a,b,c,d)
     eb = 4 * dtype_bytes(wl.dtype)
+    if wl.variant in ("cr", "lf", "thomas"):
+        # these variants consume no tuned knobs at all (XLA-fused solves);
+        # a singleton space keeps sweeps/datasets free of duplicate configs
+        params = [
+            ParamSpec("tile_n", (wl.n,)),
+            ParamSpec("rows_per_program", (1,)),
+            ParamSpec("radix", (2,)),
+            ParamSpec("unroll", (1,)),
+            ParamSpec("in_register", (0,)),
+        ]
+        return SearchSpace(wl, params, constraints=(vmem_fits(eb),))
     max_rows = floor_pow2(min(256, max(wl.batch, 1)))
     radix_dom = (2, 4, 8) if wl.variant == "wm" else (2,)  # paper: only WM retunes r
+    # wm runs as an XLA chunked prefix: rows/unroll/in_register shape
+    # nothing it executes, so only the radix (-> chunk) is swept
+    rows_dom = (1,) if wl.variant == "wm" else pow2_range(1, max_rows)
+    unroll_dom = (1,) if wl.variant == "wm" else (1, 2, 4)
+    in_reg_dom = (0,) if wl.variant == "wm" else (0, 1)
     params = [
         ParamSpec("tile_n", (wl.n,)),           # whole system stays resident
-        ParamSpec("rows_per_program", pow2_range(1, max_rows)),
+        ParamSpec("rows_per_program", rows_dom),
         ParamSpec("radix", radix_dom),
-        ParamSpec("unroll", (1, 2, 4)),
-        ParamSpec("in_register", (0, 1)),
+        ParamSpec("unroll", unroll_dom),
+        ParamSpec("in_register", in_reg_dom),
     ]
     return SearchSpace(
         wl,
@@ -352,7 +378,7 @@ _SPACE_BUILDERS: Dict[str, Callable[[Workload], SearchSpace]] = {
     "fft": fft_space,
     "large_fft": large_fft_space,
     "ssd": scan_space,        # the SSD inter-chunk scan shares the scan space
-    "rglru": scan_space,
+    "rglru": linrec_space,    # rglru IS a linrec: dead unroll knob pruned
     "attention": attention_space,
     "matmul": matmul_space,
 }

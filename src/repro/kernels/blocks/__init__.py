@@ -1,0 +1,15 @@
+"""BPLG-style building-block layer.
+
+``plan`` (pure Python — safe for the numpy-only analytical/ML stack) is
+re-exported here; ``primitives`` and ``driver`` import jax and must be
+imported explicitly by kernel code:
+
+    from repro.kernels.blocks.plan import StagePlan, build_plan, plan_for
+    from repro.kernels.blocks import primitives, driver   # jax layers
+"""
+from repro.kernels.blocks.plan import (DEFAULT_SEQ_LIMIT, Launch, StagePlan,
+                                       build_plan, plan_for, stage_radices,
+                                       stage_strides, wm_chunk)
+
+__all__ = ["DEFAULT_SEQ_LIMIT", "Launch", "StagePlan", "build_plan",
+           "plan_for", "stage_radices", "stage_strides", "wm_chunk"]

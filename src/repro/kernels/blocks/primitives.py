@@ -1,0 +1,199 @@
+"""Shared in-kernel building blocks (the BPLG CTA-primitive layer).
+
+Every staged kernel in the repo is a composition of four primitives, all
+operating on the trailing (lane) dimension of VMEM-resident tiles:
+
+  * ``shift_fold``   — one radix-r Kogge-Stone level for an associative
+                       monoid (prefix sum), with balanced-tree unrolling;
+  * ``linrec_level`` — the same level for the (a, b) linear-recurrence
+                       monoid (composition order fixed by the algebra);
+  * ``butterfly``    — the radix-rr complex DFT fold + twiddles of one
+                       Stockham stage, including the ``stage_view``
+                       reshape-repack (the index-digit layout transform);
+  * ``carry chain``  — init/fold/store of the cross-tile VMEM carry that
+                       turns a column-tiled grid into one streaming pass.
+
+Extracted from the historical per-kernel copies in scan/fft/tridiag so a
+new kernel family composes them instead of re-rolling its own stage loop
+(docs/kernels.md walks through a port).  Stage sequences come from
+``repro.kernels.blocks.plan.stage_radices`` — never recompute them here.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Lane shifts
+# ---------------------------------------------------------------------------
+
+def shift_lanes(x: jax.Array, off: int, fill: float) -> jax.Array:
+    """Shift the trailing dim by ``off`` lanes, filling with the monoid
+    identity.  off > 0 shifts right (element i sees neighbour i - off),
+    off < 0 shifts left.  Mosaic lowers the concatenate to lane shifts."""
+    if off == 0:
+        return x
+    pad = jnp.full(x.shape[:-1] + (abs(off),), fill, dtype=x.dtype)
+    if off > 0:
+        return jnp.concatenate([pad, x[..., :-off]], axis=-1)
+    return jnp.concatenate([x[..., -off:], pad], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Radix-r Kogge-Stone fold (associative monoid)
+# ---------------------------------------------------------------------------
+
+def _tree_fold(parts: List[jax.Array]) -> jax.Array:
+    """Balanced pairwise reduction — associativity buys ILP (rule 3)."""
+    while len(parts) > 1:
+        nxt = []
+        for i in range(0, len(parts) - 1, 2):
+            nxt.append(parts[i] + parts[i + 1])
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
+
+
+def shift_fold(x: jax.Array, fan_in: int, stride: int, *, fill: float = 0.0,
+               unroll: int = 1) -> jax.Array:
+    """One stage of a radix-``fan_in`` prefix circuit: fold the fan_in - 1
+    shifted neighbours at multiples of ``stride`` into every element."""
+    tile_n = x.shape[-1]
+    shifted = [shift_lanes(x, k * stride, fill) for k in range(1, fan_in)
+               if k * stride < tile_n]
+    if not shifted:
+        return x
+    if unroll > 1:
+        return x + _tree_fold(shifted)
+    acc = x
+    for sh in shifted:
+        acc = acc + sh
+    return acc
+
+
+def linrec_level(aa: jax.Array, bb: jax.Array, fan_in: int, stride: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """One stage for the linear-recurrence pair monoid.
+
+    Composition (a, b)_new after (a, b)_old is (a_o * a_n, a_n * b_o + b_n);
+    the fold order is fixed by the algebra, so there is no unroll knob —
+    the search spaces prune it for linrec variants.
+    """
+    tile_n = aa.shape[-1]
+    acc_a, acc_b = aa, bb
+    for k in range(1, fan_in):
+        off = k * stride
+        if off >= tile_n:
+            break
+        sa = shift_lanes(aa, off, 1.0)    # identity transform: a = 1
+        sb = shift_lanes(bb, off, 0.0)    # identity transform: b = 0
+        acc_b = acc_a * sb + acc_b
+        acc_a = acc_a * sa
+    return acc_a, acc_b
+
+
+# ---------------------------------------------------------------------------
+# Stockham butterfly stage (complex fold on split re/im planes)
+# ---------------------------------------------------------------------------
+
+def cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def butterfly(re: jax.Array, im: jax.Array, *, n: int, n_cur: int, s: int,
+              rr: int, sign: float) -> Tuple[jax.Array, jax.Array]:
+    """One radix-``rr`` Stockham stage on (rows, n) split planes.
+
+    ``stage_view``: the planes are viewed as (rows, n_cur, s), split into
+    rr parts of m = n_cur // rr, folded through the rr-point DFT matrix
+    with per-part twiddles, and repacked with the radix digit innermost —
+    the self-sorting index-digit layout transform.  ``rr`` must divide
+    ``n_cur``; plans built from ``stage_radices`` guarantee it (the ragged
+    mixed-radix final stage simply arrives with a smaller rr).
+    """
+    rows = re.shape[0]
+    assert n_cur % rr == 0, (n_cur, rr)
+    m = n_cur // rr
+    vr = re.reshape(rows, n_cur, s)
+    vi = im.reshape(rows, n_cur, s)
+    parts = [(vr[:, k * m:(k + 1) * m, :], vi[:, k * m:(k + 1) * m, :])
+             for k in range(rr)]
+    p = jax.lax.broadcasted_iota(jnp.float32, (1, m, 1), 1)
+    outs = []
+    for j in range(rr):
+        tr = jnp.zeros((rows, m, s), jnp.float32)
+        ti = jnp.zeros((rows, m, s), jnp.float32)
+        for k in range(rr):
+            ang = sign * 2.0 * math.pi * ((j * k) % rr) / rr
+            wr, wi = math.cos(ang), math.sin(ang)
+            pr, pi_ = parts[k]
+            tr += pr * wr - pi_ * wi
+            ti += pr * wi + pi_ * wr
+        theta = sign * 2.0 * math.pi * j / n_cur
+        twr = jnp.cos(theta * p)
+        twi = jnp.sin(theta * p)
+        tr, ti = cmul(tr, ti, twr, twi)
+        outs.append((tr, ti))
+    re = jnp.stack([o[0] for o in outs], axis=2).reshape(rows, n)
+    im = jnp.stack([o[1] for o in outs], axis=2).reshape(rows, n)
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# PCR reduction step (the tridiagonal fold)
+# ---------------------------------------------------------------------------
+
+def pcr_step(a, b, c, d, stride: int):
+    """One full-width cyclic-reduction level at ``stride``: every equation
+    eliminates its +-stride neighbours (identity fill keeps pivots finite)."""
+    bm = shift_lanes(b, stride, 1.0)
+    bp = shift_lanes(b, -stride, 1.0)
+    am, ap = shift_lanes(a, stride, 0.0), shift_lanes(a, -stride, 0.0)
+    cm, cp = shift_lanes(c, stride, 0.0), shift_lanes(c, -stride, 0.0)
+    dm, dp = shift_lanes(d, stride, 0.0), shift_lanes(d, -stride, 0.0)
+    alpha = -a / bm
+    gamma = -c / bp
+    return (alpha * am,
+            b + alpha * cm + gamma * ap,
+            gamma * cp,
+            d + alpha * dm + gamma * dp)
+
+
+# ---------------------------------------------------------------------------
+# Cross-tile carry chain
+# ---------------------------------------------------------------------------
+
+def carry_init(carry_ref, axis: int = 1) -> None:
+    """Zero the VMEM carry on the first sequential tile of ``axis``."""
+    @pl.when(pl.program_id(axis) == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+
+def carry_fold_add(x: jax.Array, carry_ref) -> jax.Array:
+    """Fold the running prefix into this tile; store the new carry."""
+    x = x + carry_ref[...]
+    carry_ref[...] = x[:, -1:]
+    return x
+
+
+def carry_fold_linrec(aa: jax.Array, bb: jax.Array, carry_ref) -> jax.Array:
+    """h = b + a * carry for the tile; store the tile's exit state."""
+    h = bb + aa * carry_ref[...]
+    carry_ref[...] = h[:, -1:]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Stage-sequence helpers shared by the kernel wrappers
+# ---------------------------------------------------------------------------
+
+def as_stages(stages: Sequence[int]) -> Tuple[int, ...]:
+    """Normalize a plan's stage sequence into a hashable static argument."""
+    return tuple(int(r) for r in stages)

@@ -5,67 +5,42 @@ paper's BPLG similarly multiplexes real/imaginary shared-memory planes for
 large tiles, §V-C). Each grid program transforms `rows_per_program` whole
 problems resident in VMEM.
 
-The staged loop is static (n, radix known at trace time): stage t views the
-buffer as (rows, n_cur, s), applies the radix-rr butterfly (rr = min(radix,
-n_cur) — ragged final stage = the paper's mixed-radix case) with twiddles
-computed in-kernel via iota+cos/sin, and re-packs. Stage re-packs are
-lane-dim permutations; on real hardware these are the index-digit layout
-transforms BPLG optimizes, here delegated to Mosaic.
+The staged loop is driven by the plan's mixed-radix stage sequence
+(``blocks.plan.stage_radices``): stage t applies the shared ``butterfly``
+building block at that stage's fan-in.  Because the sequence factors n
+exactly, the ragged final stage is just a smaller butterfly — the
+historical ``rr = min(radix, n_cur)`` loop crashed at trace time whenever
+an intermediate n_cur stopped dividing by the radix (radix 8 at n = 96).
 
 Tunables: rows_per_program, radix; tile_n = n (whole-problem residency);
-multi-pass large-N handled by the four-step driver in ops.py.
+multi-pass large-N handled by the four-step driver in blocks/driver.py.
 """
 from __future__ import annotations
 
 import functools
-import math
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.blocks import primitives as prim
+from repro.kernels.blocks.plan import stage_radices
+
+import jax.numpy as jnp
 
 
-def _cmul(ar, ai, br, bi):
-    return ar * br - ai * bi, ar * bi + ai * br
-
-
-def _fft_kernel(re_ref, im_ref, ore_ref, oim_ref, *, n: int, radix: int,
-                inverse: bool):
-    rows = re_ref.shape[0]
+def _fft_kernel(re_ref, im_ref, ore_ref, oim_ref, *, n: int,
+                stages: Tuple[int, ...], inverse: bool):
     sign = 1.0 if inverse else -1.0
     re = re_ref[...].astype(jnp.float32)
     im = im_ref[...].astype(jnp.float32)
 
     n_cur, s = n, 1
-    while n_cur > 1:
-        rr = min(radix, n_cur)
-        m = n_cur // rr
-        vr = re.reshape(rows, n_cur, s)
-        vi = im.reshape(rows, n_cur, s)
-        parts = [(vr[:, k * m:(k + 1) * m, :], vi[:, k * m:(k + 1) * m, :])
-                 for k in range(rr)]
-        p = jax.lax.broadcasted_iota(jnp.float32, (1, m, 1), 1)
-        outs = []
-        for j in range(rr):
-            tr = jnp.zeros((rows, m, s), jnp.float32)
-            ti = jnp.zeros((rows, m, s), jnp.float32)
-            for k in range(rr):
-                ang = sign * 2.0 * math.pi * ((j * k) % rr) / rr
-                wr, wi = math.cos(ang), math.sin(ang)
-                pr, pi_ = parts[k]
-                tr += pr * wr - pi_ * wi
-                ti += pr * wi + pi_ * wr
-            theta = sign * 2.0 * math.pi * j / n_cur
-            twr = jnp.cos(theta * p)
-            twi = jnp.sin(theta * p)
-            tr, ti = _cmul(tr, ti, twr, twi)
-            outs.append((tr, ti))
-        re = jnp.stack([o[0] for o in outs], axis=2).reshape(rows, n)
-        im = jnp.stack([o[1] for o in outs], axis=2).reshape(rows, n)
-        n_cur, s = m, s * rr
+    for rr in stages:
+        re, im = prim.butterfly(re, im, n=n, n_cur=n_cur, s=s, rr=rr,
+                                sign=sign)
+        n_cur, s = n_cur // rr, s * rr
 
     scale = (1.0 / n) if inverse else 1.0
     ore_ref[...] = (re * scale).astype(ore_ref.dtype)
@@ -73,16 +48,19 @@ def _fft_kernel(re_ref, im_ref, ore_ref, oim_ref, *, n: int, radix: int,
 
 
 @functools.partial(jax.jit, static_argnames=("rows_per_program", "radix",
-                                             "inverse", "interpret"))
+                                             "stages", "inverse",
+                                             "interpret"))
 def fft_pallas(re: jax.Array, im: jax.Array, *, rows_per_program: int = 4,
-               radix: int = 2, inverse: bool = False,
-               interpret: bool = False):
+               radix: int = 2, stages: Optional[Tuple[int, ...]] = None,
+               inverse: bool = False, interpret: bool = False):
     """Row-wise complex FFT on split planes; returns (re, im)."""
     batch, n = re.shape
     rows = rows_per_program
     grid = (batch // rows,)
     spec = pl.BlockSpec((rows, n), lambda i: (i, 0))
-    kernel = functools.partial(_fft_kernel, n=n, radix=radix, inverse=inverse)
+    stages = prim.as_stages(stages) if stages else stage_radices(n, radix)
+    kernel = functools.partial(_fft_kernel, n=n, stages=stages,
+                               inverse=inverse)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -3,20 +3,22 @@
 `fft(x)` — x complex (batch, n):
   * n <= max in-VMEM tile: single Stockham kernel launch, radix/rows from
     the TunerSession (paper §V-C small/medium sizes);
-  * larger n: Bailey four-step decomposition N = n1*n2 — column FFTs,
-    twiddle, row FFTs, transpose — i.e. the paper's §IV-C multi-kernel
-    strategy with m kernels; the tile split n1 comes from the tuned
-    `tile_n` (analytical rule: the largest resident tile minimizes m).
+  * larger n: the op="large_fft" workload resolves through the same
+    session and its StagePlan describes the Bailey four-step decomposition
+    N = n1*n2 — executed by ``repro.kernels.blocks.driver.four_step_fft``
+    (the paper's §IV-C multi-kernel strategy with m kernels; the tile
+    split n1 comes from the tuned `tile_n`).
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.space import Workload, fft_space, fit_block, large_fft_space
+from repro.core.space import Workload, fft_space, large_fft_space
 from repro.core.multikernel import max_resident_tile
+from repro.kernels.blocks import driver
+from repro.kernels.blocks.plan import plan_for
 from repro.kernels.fft.kernel import fft_pallas
 from repro.kernels.fft.ref import fft_ref
 from repro.tuning import default_session, on_cpu, tuned_kernel
@@ -30,16 +32,6 @@ def _normalize(cfg, wl, dims=None):
             "tile_n": cfg.get("tile_n", 2048)}
 
 
-def _kernel_fft(x: jax.Array, radix: int, rows: int, inverse: bool,
-                interpret: bool) -> jax.Array:
-    batch, n = x.shape
-    rows = fit_block(rows, batch)
-    re, im = jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
-    yre, yim = fft_pallas(re, im, rows_per_program=rows, radix=radix,
-                          inverse=inverse, interpret=interpret)
-    return (yre + 1j * yim).astype(jnp.complex64)
-
-
 @tuned_kernel("fft", space=fft_space, pallas=fft_pallas, reference=fft_ref,
               normalize=_normalize, variants=("stockham",))
 def fft(x: jax.Array, config: Optional[dict] = None,
@@ -51,36 +43,15 @@ def fft(x: jax.Array, config: Optional[dict] = None,
     max_tile = max_resident_tile(wl_small)
     if n <= max_tile:
         cfg = session.resolve(wl_small, config=config)
-        return _kernel_fft(x, cfg["radix"], cfg["rows_per_program"],
-                           inverse, interpret)
+        plan = plan_for(wl_small, cfg)
+        return driver.dispatch_fft(x, plan, inverse=inverse,
+                                   interpret=interpret)
 
-    # ---- four-step multi-kernel path ----
-    cfg = session.resolve(
-        Workload(op="large_fft", n=n, batch=batch, variant="stockham"),
-        config=config)
-    n1 = fit_block(min(cfg["tile_n"], max_tile), n)
-    n2 = n // n1
-    sign = 1.0 if inverse else -1.0
-    v = x.reshape(batch, n2, n1)
-    # kernel 1: length-n2 FFTs down the columns (batch*n1 problems)
-    vc = jnp.transpose(v, (0, 2, 1)).reshape(batch * n1, n2)
-    if n2 <= max_tile:
-        vc = _kernel_fft(vc, cfg["radix"], cfg["rows_per_program"],
-                         inverse, interpret)
-    else:  # recurse (m = 3 kernels, paper: N >= 2^19)
-        vc = fft(vc, interpret=interpret, inverse=inverse)
-    v = jnp.transpose(vc.reshape(batch, n1, n2), (0, 2, 1))
-    # twiddle
-    k2 = jnp.arange(n2).reshape(1, n2, 1)
-    k1 = jnp.arange(n1).reshape(1, 1, n1)
-    v = v * jnp.exp(sign * 2j * jnp.pi * (k1 * k2) / n).astype(jnp.complex64)
-    # kernel 2: length-n1 FFTs along rows
-    vr = v.reshape(batch * n2, n1)
-    vr = _kernel_fft(vr, cfg["radix"], cfg["rows_per_program"],
-                     inverse, interpret)
-    v = vr.reshape(batch, n2, n1)
-    # transpose for self-sorting output
-    return jnp.transpose(v, (0, 2, 1)).reshape(batch, n)
+    # ---- four-step multi-kernel path (plan-driven) ----
+    wl = Workload(op="large_fft", n=n, batch=batch, variant="stockham")
+    cfg = session.resolve(wl, config=config)
+    plan = plan_for(wl, cfg, max_tile=max_tile)
+    return driver.four_step_fft(x, plan, inverse=inverse, interpret=interpret)
 
 
 # the four-step driver resolves op="large_fft" through the same session;

@@ -4,8 +4,10 @@ The gate computation lives in the model layer; this op runs the recurrence
 h_t = a_t h_{t-1} + sqrt(1-a_t^2) u_t by flattening (B, L, D) into
 (B*D, L) rows for the scan kernel — the direct integration of the paper's
 tuned scan into RecurrentGemma. The rglru workload resolves through the
-TunerSession under its own op name (the space is the scan space), so
-per-op DB entries and ``overrides(rglru=...)`` apply.
+TunerSession under its own op name (the space is the linrec-pruned scan
+space), builds its StagePlan, and dispatches fused or multi-pass through
+the shared blocks driver, so per-op DB entries and ``overrides(rglru=...)``
+apply.
 """
 from __future__ import annotations
 
@@ -14,7 +16,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.space import Workload, scan_space
+from repro.core.space import Workload, linrec_space
+from repro.kernels.blocks import driver
+from repro.kernels.blocks.plan import plan_for
 from repro.kernels.scan.kernel import scan_linrec_pallas
 from repro.kernels.scan.ops import _normalize as _normalize_scan
 from repro.kernels.scan.ops import linear_recurrence
@@ -22,7 +26,7 @@ from repro.kernels.scan.ref import scan_linrec_assoc_ref
 from repro.tuning import default_session, plan_execution, tuned_kernel
 
 
-@tuned_kernel("rglru", space=scan_space, pallas=scan_linrec_pallas,
+@tuned_kernel("rglru", space=linrec_space, pallas=scan_linrec_pallas,
               reference=scan_linrec_assoc_ref, normalize=_normalize_scan)
 def rglru(a: jax.Array, u: jax.Array, config: Optional[dict] = None,
           interpret: Optional[bool] = None,
@@ -33,9 +37,17 @@ def rglru(a: jax.Array, u: jax.Array, config: Optional[dict] = None,
     b_rows = jnp.transpose(b, (0, 2, 1)).reshape(B * D, L)
     run_pallas, interpret_eff = plan_execution(use_pallas, interpret)
     if run_pallas:
-        cfg = default_session().resolve(
-            Workload(op="rglru", n=L, batch=B * D), config=config)
-        h = scan_linrec_pallas(a_rows, b_rows, interpret=interpret_eff, **cfg)
+        wl = Workload(op="rglru", n=L, batch=B * D)
+        cfg = default_session().resolve(wl, config=config)
+        plan = plan_for(wl, cfg)
+        if plan.kind == "multipass":
+            h = driver.multipass_linrec(a_rows, b_rows, plan,
+                                        interpret=interpret_eff)
+        else:
+            h = driver.launch(scan_linrec_pallas, plan.launches[0],
+                              a_rows, b_rows, rows_per_program=plan.rows,
+                              tile_n=plan.tile_n, stages=plan.stages,
+                              interpret=interpret_eff)
     else:
         h = linear_recurrence(a_rows, b_rows, use_pallas=False)
     return jnp.transpose(h.reshape(B, D, L), (0, 2, 1))

@@ -3,24 +3,24 @@
 Layout: problems are rows of a (batch, n) array. The grid is
 (batch/rows_per_program, n/tile_n); the column dimension is sequential on a
 TPU core, so a VMEM scratch carries the running prefix across column tiles
-(the multi-pass path of paper §IV-C; a single column tile is the in-VMEM
-fast path, and with `in_register` the block is small enough to stay
-VREG-resident between circuit levels).
+(one streaming HBM pass; the parallel §IV-C multi-pass alternative lives in
+``repro.kernels.blocks.driver``).
 
-The in-block circuit is a radix-r Kogge-Stone tree: at level s (stride r^s)
-each element folds in r-1 shifted neighbours, so K = ceil(log_r tile_n)
-levels replace log2 levels — the paper's rule-4 radix lever. Shifts are
-zero/identity-padded `concatenate`s, which Mosaic lowers to lane shifts.
+The in-block circuit is built from the shared building blocks
+(``repro.kernels.blocks.primitives``): one ``shift_fold`` /
+``linrec_level`` per stage of the plan's mixed-radix stage sequence
+(``stage_radices`` — the paper's rule-4 radix lever, ragged final stage
+included), plus the ``carry_*`` chain primitives across column tiles.
 
 Tunable parameters consumed from the TuningDB config:
-  tile_n, rows_per_program, radix, unroll (trace-time loop grouping hint;
-  Pallas fully unrolls static Python loops, so this knob only reorders the
-  fold tree), in_register (skip the cross-tile carry machinery).
+  tile_n, rows_per_program, radix, unroll (balanced-tree fold grouping;
+  linrec's fold order is fixed by the algebra, so its space prunes it),
+  in_register (space/model-only knob).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,91 +28,46 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.blocks import primitives as prim
+from repro.kernels.blocks.plan import stage_radices, stage_strides
 
 
-def _shift_right(x: jax.Array, off: int, fill: float) -> jax.Array:
-    """Shift columns right by `off`, filling with the monoid identity."""
-    if off <= 0:
-        return x
-    pad = jnp.full(x.shape[:-1] + (off,), fill, dtype=x.dtype)
-    return jnp.concatenate([pad, x[..., :-off]], axis=-1)
-
-
-def _ks_levels(tile_n: int, radix: int):
-    """Strides for each Kogge-Stone level."""
-    strides = []
-    s = 1
-    while s < tile_n:
-        strides.append(s)
-        s *= radix
-    return strides
-
-
-def _scan_add_kernel(x_ref, o_ref, carry_ref, *, radix: int, unroll: int,
-                     multi_tile: bool):
+def _scan_add_kernel(x_ref, o_ref, carry_ref, *, stages: Tuple[int, ...],
+                     unroll: int, multi_tile: bool):
     if multi_tile:
-        @pl.when(pl.program_id(1) == 0)
-        def _init():
-            carry_ref[...] = jnp.zeros_like(carry_ref)
-
+        prim.carry_init(carry_ref)
     x = x_ref[...].astype(jnp.float32)
-    tile_n = x.shape[-1]
-    for stride in _ks_levels(tile_n, radix):
-        acc = x
-        # fold r-1 shifted copies; `unroll` groups the fold pairwise
-        # (associativity lets us build a balanced tree for ILP)
-        shifted = [_shift_right(x, k * stride, 0.0) for k in range(1, radix)
-                   if k * stride < tile_n]
-        if unroll > 1:
-            while len(shifted) > 1:
-                nxt = []
-                for i in range(0, len(shifted) - 1, 2):
-                    nxt.append(shifted[i] + shifted[i + 1])
-                if len(shifted) % 2:
-                    nxt.append(shifted[-1])
-                shifted = nxt
-            acc = acc + shifted[0] if shifted else acc
-        else:
-            for sh in shifted:
-                acc = acc + sh
-        x = acc
+    for fan_in, stride in zip(stages, stage_strides(stages)):
+        x = prim.shift_fold(x, fan_in, stride, fill=0.0, unroll=unroll)
     if multi_tile:
-        x = x + carry_ref[...]
-        carry_ref[...] = x[:, -1:]
+        x = prim.carry_fold_add(x, carry_ref)
     o_ref[...] = x.astype(o_ref.dtype)
 
 
-def _scan_linrec_kernel(a_ref, b_ref, h_ref, carry_ref, *, radix: int,
-                        unroll: int, multi_tile: bool):
-    del unroll  # fold order fixed by composition order for linrec
+def _scan_linrec_kernel(a_ref, b_ref, h_ref, carry_ref, *,
+                        stages: Tuple[int, ...], multi_tile: bool,
+                        want_products: bool = False, p_ref=None):
     if multi_tile:
-        @pl.when(pl.program_id(1) == 0)
-        def _init():
-            carry_ref[...] = jnp.zeros_like(carry_ref)
-
+        prim.carry_init(carry_ref)
     aa = a_ref[...].astype(jnp.float32)
     bb = b_ref[...].astype(jnp.float32)
-    tile_n = aa.shape[-1]
-    for stride in _ks_levels(tile_n, radix):
-        acc_a, acc_b = aa, bb
-        for k in range(1, radix):
-            off = k * stride
-            if off >= tile_n:
-                break
-            sa = _shift_right(aa, off, 1.0)   # identity transform a=1
-            sb = _shift_right(bb, off, 0.0)   # identity transform b=0
-            # compose: acc (newer) after shifted (older):
-            # (a, b) = (a_old * a_new, a_new * b_old + b_new)
-            acc_b = acc_a * sb + acc_b
-            acc_a = acc_a * sa
-        aa, bb = acc_a, acc_b
+    for fan_in, stride in zip(stages, stage_strides(stages)):
+        aa, bb = prim.linrec_level(aa, bb, fan_in, stride)
     # aa now holds prefix products of a; bb the zero-state response
+    if want_products:
+        p_ref[...] = aa.astype(p_ref.dtype)
     if multi_tile:
-        h = bb + aa * carry_ref[...]
-        carry_ref[...] = h[:, -1:]
+        h = prim.carry_fold_linrec(aa, bb, carry_ref)
     else:
         h = bb
     h_ref[...] = h.astype(h_ref.dtype)
+
+
+def _linrec_prod_kernel(a_ref, b_ref, h_ref, p_ref, carry_ref, *,
+                        stages: Tuple[int, ...], multi_tile: bool):
+    _scan_linrec_kernel(a_ref, b_ref, h_ref, carry_ref, stages=stages,
+                        multi_tile=multi_tile, want_products=True,
+                        p_ref=p_ref)
 
 
 def _grid_and_specs(batch: int, n: int, rows: int, tile_n: int, n_in: int):
@@ -123,18 +78,28 @@ def _grid_and_specs(batch: int, n: int, rows: int, tile_n: int, n_in: int):
     return grid, [in_spec] * n_in, out_spec, scratch
 
 
+def _resolve_stages(stages: Optional[Tuple[int, ...]], tile_n: int,
+                    radix: int) -> Tuple[int, ...]:
+    """Plans pass their stage sequence; direct callers fall back to the
+    same decomposition the planner would produce."""
+    return prim.as_stages(stages) if stages else stage_radices(tile_n, radix)
+
+
 @functools.partial(jax.jit, static_argnames=("rows_per_program", "tile_n",
-                                             "radix", "unroll", "interpret"))
+                                             "radix", "unroll", "stages",
+                                             "interpret"))
 def scan_add_pallas(x: jax.Array, *, rows_per_program: int = 8,
                     tile_n: int = 0, radix: int = 2, unroll: int = 1,
+                    stages: Optional[Tuple[int, ...]] = None,
                     interpret: bool = False) -> jax.Array:
     """Inclusive prefix sum over the last axis of (batch, n)."""
     batch, n = x.shape
     tile_n = tile_n or n
     grid, in_specs, out_spec, scratch = _grid_and_specs(
         batch, n, rows_per_program, tile_n, 1)
-    kernel = functools.partial(_scan_add_kernel, radix=radix, unroll=unroll,
-                               multi_tile=True)
+    kernel = functools.partial(
+        _scan_add_kernel, stages=_resolve_stages(stages, tile_n, radix),
+        unroll=unroll, multi_tile=True)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -149,17 +114,21 @@ def scan_add_pallas(x: jax.Array, *, rows_per_program: int = 8,
 
 
 @functools.partial(jax.jit, static_argnames=("rows_per_program", "tile_n",
-                                             "radix", "unroll", "interpret"))
+                                             "radix", "unroll", "stages",
+                                             "interpret"))
 def scan_linrec_pallas(a: jax.Array, b: jax.Array, *, rows_per_program: int = 8,
                        tile_n: int = 0, radix: int = 2, unroll: int = 1,
+                       stages: Optional[Tuple[int, ...]] = None,
                        interpret: bool = False) -> jax.Array:
     """h_t = a_t * h_{t-1} + b_t along the last axis of (batch, n) pairs."""
+    del unroll  # fold order fixed by composition order for linrec
     batch, n = a.shape
     tile_n = tile_n or n
     grid, in_specs, out_spec, scratch = _grid_and_specs(
         batch, n, rows_per_program, tile_n, 2)
-    kernel = functools.partial(_scan_linrec_kernel, radix=radix, unroll=unroll,
-                               multi_tile=True)
+    kernel = functools.partial(
+        _scan_linrec_kernel, stages=_resolve_stages(stages, tile_n, radix),
+        multi_tile=True)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -167,6 +136,38 @@ def scan_linrec_pallas(a: jax.Array, b: jax.Array, *, rows_per_program: int = 8,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_program", "radix",
+                                             "stages", "interpret"))
+def scan_linrec_prod_pallas(a: jax.Array, b: jax.Array, *,
+                            rows_per_program: int = 8, radix: int = 2,
+                            stages: Optional[Tuple[int, ...]] = None,
+                            interpret: bool = False):
+    """Single-tile linrec returning (h, prefix products of a).
+
+    The multi-pass driver's chunk kernel: each program holds whole rows
+    (tile_n == n), so no carry chain — the products output is exactly the
+    per-chunk transfer operator the carry scan then composes.
+    """
+    batch, n = a.shape
+    rows = rows_per_program
+    grid = (batch // rows, 1)
+    spec = pl.BlockSpec((rows, n), lambda i, j: (i, j))
+    kernel = functools.partial(
+        _linrec_prod_kernel, stages=_resolve_stages(stages, n, radix),
+        multi_tile=False)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype)] * 2,
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

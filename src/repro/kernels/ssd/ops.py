@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.space import Workload, fit_block, scan_space
-from repro.kernels.scan.ref import scan_linrec_assoc_ref
+from repro.kernels.blocks import driver
 from repro.kernels.ssd.kernel import ssd_apply_entry_pallas, ssd_intra_pallas
 from repro.kernels.ssd.ref import ssd_chunked_ref
 from repro.tuning import default_session, plan_execution, tuned_kernel
@@ -51,10 +51,14 @@ def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
         xbh, abh, bbh, cbh, chunk=chunk, interpret=interpret)
     nc = L // chunk
 
-    # phase B: inter-chunk linear recurrence (rows = BH*S*P, length nc)
+    # phase B: inter-chunk linear recurrence (rows = BH*S*P, length nc) on
+    # the shared carry-chain building block — the tuned scan kernel where
+    # the (op="scan", variant="linrec") space has a valid config for nc,
+    # the XLA reference otherwise (odd nc)
     a_rows = jnp.broadcast_to(a_chunk[:, None, None, :], (B * H, S, P, nc))
     s_rows = jnp.transpose(state, (0, 2, 3, 1))          # (BH, S, P, nc)
-    h = scan_linrec_assoc_ref(a_rows.reshape(-1, nc), s_rows.reshape(-1, nc))
+    h = driver.linrec_rows(a_rows.reshape(-1, nc), s_rows.reshape(-1, nc),
+                           use_pallas=True, interpret=interpret)
     h = h.reshape(B * H, S, P, nc)
     entry = jnp.concatenate(
         [jnp.zeros_like(h[..., :1]), h[..., :-1]], axis=-1)

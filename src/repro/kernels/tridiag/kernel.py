@@ -22,20 +22,9 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
-
-
-def _shift(x: jax.Array, off: int, fill: float) -> jax.Array:
-    """off > 0: shift right (neighbour i-off); off < 0: shift left."""
-    if off == 0:
-        return x
-    pad_shape = x.shape[:-1] + (abs(off),)
-    pad = jnp.full(pad_shape, fill, dtype=x.dtype)
-    if off > 0:
-        return jnp.concatenate([pad, x[..., :-off]], axis=-1)
-    return jnp.concatenate([x[..., -off:], pad], axis=-1)
+from repro.kernels.blocks import primitives as prim
 
 
 def _pcr_kernel(a_ref, b_ref, c_ref, d_ref, x_ref, *, n: int, unroll: int):
@@ -48,17 +37,7 @@ def _pcr_kernel(a_ref, b_ref, c_ref, d_ref, x_ref, *, n: int, unroll: int):
     steps = max(1, math.ceil(math.log2(n)))
     stride = 1
     for _ in range(steps):
-        bm = _shift(b, stride, 1.0)    # b_{i-s}
-        bp = _shift(b, -stride, 1.0)   # b_{i+s}
-        am, ap = _shift(a, stride, 0.0), _shift(a, -stride, 0.0)
-        cm, cp = _shift(c, stride, 0.0), _shift(c, -stride, 0.0)
-        dm, dp = _shift(d, stride, 0.0), _shift(d, -stride, 0.0)
-        alpha = -a / bm
-        gamma = -c / bp
-        a = alpha * am
-        c = gamma * cp
-        d = d + alpha * dm + gamma * dp
-        b = b + alpha * cm + gamma * ap
+        a, b, c, d = prim.pcr_step(a, b, c, d, stride)
         stride *= 2
     x_ref[...] = (d / b).astype(x_ref.dtype)
 

@@ -23,17 +23,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.space import Workload, fit_block, tridiag_space
+from repro.kernels.blocks import driver
+from repro.kernels.blocks.plan import plan_for, wm_chunk
 from repro.kernels.tridiag.kernel import pcr_pallas
 from repro.kernels.tridiag.ref import thomas_ref
-from repro.tuning import default_session, on_cpu, tuned_kernel
+from repro.tuning import default_session, on_cpu, plan_execution, tuned_kernel
+
+# systems longer than this route the LF substitution sweeps through the
+# multi-pass scan driver (paper §IV-C m-kernel path for tridiag)
+LF_MULTIPASS_MIN = 1 << 15
 
 
 def _normalize(cfg, wl, dims=None):
-    """Fit the PCR grid rows to the batch; radix/unroll pass through (the
-    WM chunk is derived from the radix at dispatch time)."""
+    """Variant-aware projection onto the knobs each solver actually
+    consumes, so the resolved config uniquely determines the executed
+    kernel (what the TuningDB records is what ran):
+
+      pcr         -> rows_per_program, unroll;
+      wm          -> radix plus the DERIVED chunk (the dispatch-time
+                     ``radix * 16`` clamp moved here, single-sourced in
+                     ``blocks.plan.wm_chunk``);
+      cr/lf/thomas -> no knobs (their spaces are singletons).
+    """
+    if wl.variant == "wm":
+        radix = cfg.get("radix", 2)
+        return {"radix": radix, "chunk": wm_chunk(radix, wl.n)}
+    if wl.variant in ("cr", "lf", "thomas"):
+        return {}
     return {"rows_per_program": fit_block(cfg.get("rows_per_program", 8),
                                           max(wl.batch, 1)),
-            "radix": cfg.get("radix", 2),
             "unroll": cfg.get("unroll", 1)}
 
 
@@ -139,6 +157,25 @@ def lf_solve(a, b, c, d):
     return x
 
 
+def lf_solve_multipass(a, b, c, d, *, use_pallas: bool = True,
+                       interpret: bool = False):
+    """LF with the substitution sweeps on the multi-pass scan driver.
+
+    The pivot prefix stays the normalized 2x2 scan (scale stability), but
+    the forward/back linear recurrences run as the shared carry-chain
+    building block — pallas-fused for small n, the §IV-C three-kernel
+    decomposition once the row exceeds the resident tile.
+    """
+    e = _pivot_prefix(a, b, c)
+    em = jnp.pad(e[..., :-1], ((0, 0), (1, 0)), constant_values=1.0)
+    alpha = (-a / em).at[..., 0].set(0.0)
+    y = driver.linrec_rows(alpha, d, use_pallas=use_pallas,
+                           interpret=interpret)
+    x = driver.linrec_rows(jnp.flip(-c / e, -1), jnp.flip(y / e, -1),
+                           use_pallas=use_pallas, interpret=interpret)
+    return jnp.flip(x, -1)
+
+
 # ---------------------------------------------------------------------------
 # WM — divide-and-conquer (chunked prefix)
 # ---------------------------------------------------------------------------
@@ -210,15 +247,22 @@ def solve(a, b, c, d, variant: str = "pcr", config: Optional[dict] = None,
     if variant == "pcr":
         interpret = on_cpu() if interpret is None else interpret
         c_ = cfg()
-        return pcr_pallas(a, b, c, d, rows_per_program=c_["rows_per_program"],
-                          unroll=c_["unroll"], interpret=interpret)
+        plan = plan_for(Workload(op="tridiag", n=n, batch=batch,
+                                 variant="pcr"), c_)
+        return driver.launch(
+            pcr_pallas, plan.launches[0], a, b, c, d,
+            rows_per_program=c_["rows_per_program"], unroll=c_["unroll"],
+            interpret=interpret)
     if variant == "cr":
         return cr_solve(a, b, c, d)
     if variant == "lf":
+        if n > LF_MULTIPASS_MIN:
+            use_pallas, interpret = plan_execution(None, interpret)
+            return lf_solve_multipass(a, b, c, d, use_pallas=use_pallas,
+                                      interpret=interpret)
         return lf_solve(a, b, c, d)
     if variant == "wm":
-        chunk = fit_block(min(max(cfg()["radix"] * 16, 8), max(n // 2, 1)), n)
-        return wm_solve(a, b, c, d, chunk=chunk)
+        return wm_solve(a, b, c, d, chunk=cfg()["chunk"])
     if variant == "thomas":
         return thomas_ref(a, b, c, d)
     raise ValueError(f"unknown tridiag variant {variant!r}")

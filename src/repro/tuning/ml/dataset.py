@@ -40,7 +40,7 @@ from repro.tuning.sweep import SweepJournal, config_key, run_sweep
 # measures interpolation/extrapolation to unseen N, not memorization.
 
 SUITE: Dict[str, Dict] = {
-    "scan": {"variants": ("lf", "ks"),
+    "scan": {"variants": ("lf", "ks", "linrec"),
              "train": (128, 256, 1024, 2048), "holdout": (512, 4096)},
     "ssd": {"variants": ("",), "train": (256, 1024), "holdout": (512,)},
     "rglru": {"variants": ("",), "train": (256, 1024), "holdout": (512,)},

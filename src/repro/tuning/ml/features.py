@@ -24,15 +24,14 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from repro.core.analytical import resources, score
+from repro.core.analytical import score
 from repro.core.space import Config, SearchSpace
-from repro.hw.tpu import (dma_efficiency, dtype_bytes,
-                          effective_element_bytes, ilp_factor,
-                          lane_utilization, sublane_utilization)
+from repro.hw.tpu import dma_efficiency, dtype_bytes, ilp_factor
+from repro.kernels.blocks.plan import plan_for
 
 # Bump whenever FEATURE_NAMES or any encoding rule changes; artifacts carry
 # the version and loading a stale one fails fast instead of mis-predicting.
-FEATURE_VERSION = 2
+FEATURE_VERSION = 3
 
 FEATURE_NAMES = (
     # workload (Input Parameters `A`)
@@ -40,9 +39,12 @@ FEATURE_NAMES = (
     # raw knobs (Performance Parameters `B`); 0.0 when a knob is absent
     "log2_tile_n", "log2_rows", "log2_radix", "log2_unroll", "in_register",
     "log2_block_q", "log2_block_k", "log2_block_m", "log2_block_n",
-    # analytical-model stack (resources + guideline score)
+    # StagePlan stack (the exact staged execution the drivers launch:
+    # launches/HBM passes, stage count, carry-chain depth, raggedness,
+    # VMEM) + the guideline score computed on the same plan
     "log2_grid", "log2_vmem", "occupancy", "log2_ilp", "log2_passes",
     "log2_block_bytes", "steps_per_pass", "vmem_fits",
+    "log2_seq_tiles", "ragged_tail",
     "tier", "radix_rank", "block_rank", "ilp_rank",
     # machine-model response curves (hw.tpu): the expert model's own
     # efficiency terms, so the forest corrects them instead of re-learning
@@ -86,22 +88,24 @@ def variant_id(variant: str) -> float:
 
 
 def _encode(space: SearchSpace, cfg: Mapping[str, int]):
-    """(feature row, analytical score) — resources/score computed once."""
+    """(feature row, analytical score) — one StagePlan per candidate.
+
+    Every architectural quantity is read off the plan (the same object the
+    kernel drivers execute), so train-time rows, predict-time rows, and
+    the launched kernels all agree; the only additions are the machine
+    model's response curves evaluated AT the plan's operating point.
+    """
     wl = space.workload
-    res = resources(space, dict(cfg))
+    plan = plan_for(wl, cfg, spec=space.spec)
+    res = plan.resources()
     sc = score(space, dict(cfg), res=res)
-    tile_n = cfg.get("tile_n", wl.n)
-    radix = max(int(res["radix"]), 2)
-    steps_per_pass = math.log(max(tile_n, 2), radix)
 
     spec = space.spec
-    rows_pp = int(cfg.get("rows_per_program", 1))
-    block_bytes = max(float(res["block_bytes"]), 1.0)
+    block_bytes = max(float(plan.block_bytes), 1.0)
     dma_eff = dma_efficiency(int(block_bytes), spec)
-    # bytes the whole problem moves per pass (read+write), the numerator of
-    # the machine model's memory term
-    eb_eff = effective_element_bytes(wl.op, wl.dtype)
-    total_bytes = 2.0 * max(wl.batch, 1) * wl.n * eb_eff * max(res["passes"], 1)
+    # bytes the whole problem moves per HBM pass (read+write), the
+    # numerator of the machine model's memory term
+    total_bytes = 2.0 * plan.batch * wl.n * plan.element_bytes * plan.passes
     t_mem_proxy = total_bytes / (spec.hbm_bandwidth * max(dma_eff, 1e-6))
 
     row = {
@@ -115,21 +119,23 @@ def _encode(space: SearchSpace, cfg: Mapping[str, int]):
         "occupancy": float(res["occupancy"]),
         "log2_ilp": _log2(max(res["ilp"], 1)),
         "log2_passes": _log2(max(res["passes"], 1)),
-        "log2_block_bytes": _log2(max(res["block_bytes"], 1)),
-        "steps_per_pass": steps_per_pass,
+        "log2_block_bytes": _log2(block_bytes),
+        "steps_per_pass": float(res["steps_per_pass"]),
         "vmem_fits": 1.0 if res["vmem"] <= space.spec.vmem_budget else 0.0,
+        "log2_seq_tiles": _log2(max(res["seq_tiles"], 1)),
+        "ragged_tail": float(res["ragged"]),
         "tier": float(sc.tier),
         "radix_rank": float(sc.radix_rank),
         "block_rank": float(sc.block_rank),
         "ilp_rank": float(sc.ilp_rank),
         "dma_eff": float(dma_eff),
         "ilp_eff": float(ilp_factor(int(cfg.get("unroll", 1)))),
-        "lane_util": float(lane_utilization(
-            min(tile_n, spec.lane_count * spec.sublane_count), spec)),
-        "sublane_util": float(sublane_utilization(rows_pp, spec)),
+        "lane_util": float(res["lane_eff"]),
+        "sublane_util": float(res["sublane_eff"]),
         "log2_total_bytes": _log2(total_bytes),
         "log2_t_mem_proxy": _log2(max(t_mem_proxy, 1e-12)),
-        "log2_steps_total": _log2(max(res["passes"] * steps_per_pass, 1.0)),
+        "log2_steps_total": _log2(
+            max(res["passes"] * max(res["steps_per_pass"], 1.0), 1.0)),
     }
     for feat, knob in _LOG2_KNOBS:
         row[feat] = _log2(cfg[knob]) if knob in cfg else 0.0

@@ -201,6 +201,54 @@ def _run_rglru(dtype, batch, n):
     assert_kernel_close(got, rglru_ref(a, u), dtype, scale=10.0)
 
 
+def _run_prefix_sum_radix(radix):
+    """Mixed-radix stage plans: the forced radix does NOT divide n, so the
+    plan's ragged final stage (stage_radices) is on the execution path."""
+    def run(dtype, batch, n):
+        import jax.numpy as jnp
+
+        from repro.kernels.scan.ops import prefix_sum
+        from repro.kernels.scan.ref import scan_add_ref
+        x = jnp.asarray(_rng(f"scanr{radix}x{batch}x{n}").normal(
+            size=(batch, n)), getattr(jnp, dtype))
+        got = prefix_sum(x, config={"radix": radix, "tile_n": n},
+                         interpret=True, use_pallas=True)
+        assert_kernel_close(got, scan_add_ref(x), dtype)
+    return run
+
+
+def _run_linrec_radix(radix):
+    def run(dtype, batch, n):
+        import jax.numpy as jnp
+
+        from repro.kernels.scan.ops import linear_recurrence
+        from repro.kernels.scan.ref import scan_linrec_assoc_ref
+        rng = _rng(f"linrecr{radix}x{batch}x{n}")
+        a = jnp.asarray(rng.uniform(0.8, 0.99, size=(batch, n)),
+                        getattr(jnp, dtype))
+        b = jnp.asarray(rng.normal(size=(batch, n)), getattr(jnp, dtype))
+        got = linear_recurrence(a, b, config={"radix": radix, "tile_n": n},
+                                interpret=True, use_pallas=True)
+        assert_kernel_close(got, scan_linrec_assoc_ref(a, b), dtype)
+    return run
+
+
+def _run_fft_radix(radix):
+    """Historically crashed at trace time (rr = min(radix, n_cur) stopped
+    dividing n_cur); the plan's exact factorization must launch and match."""
+    def run(dtype, batch, n):
+        import jax.numpy as jnp
+
+        from repro.kernels.fft.ops import fft
+        from repro.kernels.fft.ref import fft_ref
+        rng = _rng(f"fftr{radix}x{batch}x{n}")
+        x = jnp.asarray(rng.normal(size=(batch, n))
+                        + 1j * rng.normal(size=(batch, n)), jnp.complex64)
+        got = fft(x, config={"radix": radix}, interpret=True)
+        assert_kernel_close(got, fft_ref(x), dtype)
+    return run
+
+
 def _run_attention(dtype, batch, n):
     import jax
     import jax.numpy as jnp
@@ -228,6 +276,16 @@ _KERNEL_TABLE = {
     "solve_lf": (_run_tridiag("lf"), ("float32",), ((7, 96),)),
     "solve_wm": (_run_tridiag("wm"), ("float32",), ((5, 96),)),
     "fft": (_run_fft, ("complex64",), ODD_BATCH_SHAPES),
+    # mixed-radix stage plans: radix does not divide n (96 = 2^5*3,
+    # 768 = 2^8*3), odd/prime batches — exercises the ragged final stage
+    "prefix_sum_radix3": (_run_prefix_sum_radix(3), ("float32",),
+                          ((7, 96), (3, 768))),
+    "prefix_sum_radix8": (_run_prefix_sum_radix(8), ("float32",),
+                          ((7, 96), (3, 768))),
+    "linear_recurrence_radix8": (_run_linrec_radix(8), ("float32",),
+                                 ((5, 96),)),
+    "fft_radix3": (_run_fft_radix(3), ("complex64",), ((5, 96),)),
+    "fft_radix8": (_run_fft_radix(8), ("complex64",), ((7, 96), (3, 768))),
     # matmul shapes: (batch*11) x 65 x n — every dim odd or prime-factored
     "matmul": (_run_matmul, ("float32", "bfloat16"), ((3, 96), (5, 128))),
     "ssd": (_run_ssd, ("float32",), ((3, 96),)),

@@ -1,0 +1,320 @@
+"""StagePlan invariants + kernel/model conformance.
+
+The building-block contract (ISSUE 5 acceptance): for every config in a
+space's ``enumerate_valid()``, the StagePlan's ``passes``/``vmem_bytes``/
+grid must match what the rebuilt scan/fft/tridiag kernels actually launch
+— counted through ``driver.capture_launches`` and re-derived here from
+the kernels' own BlockSpec arithmetic, so the plan cannot drift from the
+execution without failing this file.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.space import Workload, build_space
+from repro.hw.tpu import V5E
+from repro.kernels.blocks import driver
+from repro.kernels.blocks.plan import (DEFAULT_SEQ_LIMIT, build_plan,
+                                       plan_for, stage_radices,
+                                       stage_strides, wm_chunk)
+from repro.tuning.registry import normalizer_for
+
+
+# ---------------------------------------------------------------------------
+# stage_radices invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 3, 8, 12, 96, 97, 128, 384, 768, 1024])
+@pytest.mark.parametrize("radix", [2, 3, 4, 8, 16])
+def test_stage_radices_product_is_n(n, radix):
+    stages = stage_radices(n, radix)
+    assert math.prod(stages) == max(n, 1)
+    assert all(r >= 2 for r in stages)
+    # strides are the running product (the KS window after each level)
+    strides = stage_strides(stages)
+    for (r, s0), s1 in zip(zip(stages, strides), strides[1:]):
+        assert s1 == s0 * r
+
+
+def test_stage_radices_prefers_nominal_fan_in():
+    assert stage_radices(512, 8) == (8, 8, 8)
+    assert stage_radices(96, 8) == (8, 6, 2)      # ragged mixed-radix tail
+    assert stage_radices(96, 3) == (3, 2, 2, 2, 2, 2)
+    assert stage_radices(97, 2) == (97,)          # prime falls through whole
+
+
+# ---------------------------------------------------------------------------
+# Plan invariants over whole spaces
+# ---------------------------------------------------------------------------
+
+_WORKLOADS = [
+    Workload(op="scan", n=256, batch=8, variant="ks"),
+    Workload(op="scan", n=256, batch=8, variant="linrec"),
+    Workload(op="tridiag", n=128, batch=8, variant="pcr"),
+    Workload(op="tridiag", n=128, batch=8, variant="wm"),
+    Workload(op="fft", n=128, batch=8, variant="stockham"),
+    Workload(op="large_fft", n=2**15, batch=4, variant="stockham"),
+    Workload(op="ssd", n=512, batch=16, variant=""),
+    Workload(op="rglru", n=256, batch=32, variant=""),
+]
+
+
+@pytest.mark.parametrize("wl", _WORKLOADS, ids=lambda w: w.key)
+def test_plan_invariants_over_valid_space(wl):
+    space = build_space(wl)
+    cfgs = space.enumerate_valid()
+    assert cfgs
+    for cfg in cfgs:
+        plan = plan_for(wl, cfg)
+        # the resident tile's stage sequence factors it exactly
+        assert math.prod(plan.stages) == max(plan.tile_n, 1) \
+            or plan.op in ("tridiag",)   # pcr/xla stage over n, radix 2
+        if plan.op == "tridiag":
+            assert math.prod(plan.stages) >= plan.n
+        # valid configs fit the budget the spaces enforce
+        assert plan.vmem_bytes <= V5E.vmem_budget * 2
+        # HBM pass count == launch count for pallas-backed plans
+        if plan.launches:
+            assert plan.passes == len(plan.launches)
+        assert plan.seq_tiles >= 1 and plan.grid_size >= 1
+        res = plan.resources()
+        assert res["passes"] == plan.passes
+        assert res["vmem"] == plan.vmem_bytes
+
+
+def test_multipass_triggers_past_seq_limit():
+    wl = Workload(op="scan", n=1024, batch=4, variant="ks")
+    cfg = {"tile_n": 64, "rows_per_program": 2, "radix": 2, "unroll": 1}
+    fused = build_plan(wl, cfg)
+    assert fused.kind == "fused" and fused.passes == 1
+    assert fused.seq_tiles == 16 <= DEFAULT_SEQ_LIMIT
+    multi = build_plan(wl, cfg, seq_limit=8)
+    assert multi.kind == "multipass" and multi.passes == 3
+    assert [l.name for l in multi.launches] == \
+        ["chunk-scan", "carry-scan", "apply-entry"]
+
+
+def test_rglru_space_prunes_unroll_without_kernel_import():
+    """The static _SPACE_BUILDERS entry and the @tuned_kernel registration
+    must agree: the numpy-only ML path builds rglru spaces without ever
+    importing the jax kernel module, and must see the pruned space."""
+    space = build_space(Workload(op="rglru", n=512, batch=1024))
+    assert space.param("unroll").domain == (1,)
+    assert all(c["unroll"] == 1 for c in space.enumerate_valid())
+
+
+def test_wm_chunk_single_source():
+    """The normalizer's chunk and the plan's chunk are the same function —
+    the resolved config uniquely determines the executed kernel."""
+    wl = Workload(op="tridiag", n=256, batch=8, variant="wm")
+    norm = normalizer_for("tridiag")({"radix": 8}, wl, None)
+    assert norm == {"radix": 8, "chunk": wm_chunk(8, 256)}
+
+
+# ---------------------------------------------------------------------------
+# Launch conformance: what runs is what the plan promised
+# ---------------------------------------------------------------------------
+
+def _expected_scan_vmem(rows, tile, planes):
+    return planes * rows * tile * 4 + rows * 4      # f32 io + carry scratch
+
+
+def test_scan_conformance_every_valid_config():
+    import jax.numpy as jnp
+
+    from repro.kernels.scan.ops import prefix_sum
+    from repro.kernels.scan.ref import scan_add_ref
+    wl = Workload(op="scan", n=128, batch=4, variant="ks")
+    space = build_space(wl)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 128)),
+                    jnp.float32)
+    ref = scan_add_ref(x)
+    for cfg in space.enumerate_valid():
+        norm = normalizer_for("scan")(cfg, wl, None)
+        plan = plan_for(wl, norm)
+        with driver.capture_launches() as rec:
+            got = prefix_sum(x, config=cfg, interpret=True, use_pallas=True)
+        assert len(rec) == plan.passes == 1
+        launch = rec[0]
+        rows, tile = norm["rows_per_program"], norm["tile_n"]
+        # grid re-derived from the kernel's own BlockSpec arithmetic
+        assert launch.grid == (4 // rows, 128 // tile) == plan.launches[0].grid
+        assert launch.block_shape == (rows, tile)
+        assert math.prod(launch.stages) == tile
+        assert launch.vmem_bytes == _expected_scan_vmem(rows, tile, 2) \
+            == plan.vmem_bytes
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-4)
+
+
+def test_fft_conformance_every_valid_config():
+    import jax.numpy as jnp
+
+    from repro.kernels.fft.ops import fft
+    from repro.kernels.fft.ref import fft_ref
+    wl = Workload(op="fft", n=64, batch=4, variant="stockham")
+    space = build_space(wl)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 64)) + 1j * rng.normal(size=(4, 64)),
+                    jnp.complex64)
+    ref = np.asarray(fft_ref(x))
+    for cfg in space.enumerate_valid():
+        norm = normalizer_for("fft")(cfg, wl, None)
+        plan = plan_for(wl, norm)
+        with driver.capture_launches() as rec:
+            got = fft(x, config=cfg, interpret=True)
+        assert len(rec) == plan.passes == 1
+        launch = rec[0]
+        rows = plan.rows
+        assert launch.grid == (4 // rows,) == plan.launches[0].grid
+        assert math.prod(launch.stages) == 64
+        assert launch.vmem_bytes == 4 * rows * 64 * 4 == plan.vmem_bytes
+        err = np.max(np.abs(np.asarray(got) - ref)) / np.max(np.abs(ref))
+        assert err < 1e-4
+
+
+def test_pcr_conformance_every_valid_config():
+    import jax
+
+    from repro.kernels.tridiag import ops
+    from repro.kernels.tridiag.ref import random_system, thomas_ref
+    wl = Workload(op="tridiag", n=64, batch=4, variant="pcr")
+    space = build_space(wl)
+    a, b, c, d = random_system(jax.random.PRNGKey(7), 4, 64)
+    ref = np.asarray(thomas_ref(a, b, c, d))
+    for cfg in space.enumerate_valid():
+        norm = normalizer_for("tridiag")(cfg, wl, None)
+        plan = plan_for(wl, norm)
+        with driver.capture_launches() as rec:
+            got = ops.solve(a, b, c, d, variant="pcr", config=cfg,
+                            interpret=True)
+        assert len(rec) == plan.passes == 1
+        launch = rec[0]
+        rows = norm["rows_per_program"]
+        assert launch.grid == (4 // rows,) == plan.launches[0].grid
+        assert launch.vmem_bytes == 5 * rows * 64 * 4 == plan.vmem_bytes
+        assert len(launch.stages) == math.ceil(math.log2(64))
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_multipass_scan_add_three_launches_match_reference():
+    import jax.numpy as jnp
+
+    from repro.kernels.scan.ref import scan_add_ref
+    wl = Workload(op="scan", n=512, batch=4, variant="ks")
+    cfg = {"tile_n": 64, "rows_per_program": 2, "radix": 4, "unroll": 2}
+    plan = build_plan(wl, cfg, seq_limit=4)
+    assert plan.kind == "multipass"
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(4, 512)),
+                    jnp.float32)
+    with driver.capture_launches() as rec:
+        got = driver.multipass_scan_add(x, plan, interpret=True)
+    assert [l.name for l in rec] == [l.name for l in plan.launches]
+    assert [l.grid for l in rec] == [l.grid for l in plan.launches]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(scan_add_ref(x)),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_multipass_scan_public_entry_bf16_single_quantization():
+    """Past the seq limit the PUBLIC prefix_sum routes multipass; sub-f32
+    dtypes must carry inter-launch state in f32 and quantize once at the
+    output (parity with the fused path's f32 VMEM carry scratch)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.scan.ops import prefix_sum
+
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(2, 16384)),
+                    jnp.bfloat16)
+    with driver.capture_launches() as rec:
+        got = prefix_sum(x, config={"tile_n": 128, "radix": 4,
+                                    "rows_per_program": 2, "unroll": 2},
+                         interpret=True, use_pallas=True)
+    assert len(rec) == 3 and got.dtype == jnp.bfloat16
+    ref = np.cumsum(np.asarray(x, np.float64), axis=1)
+    rel = np.max(np.abs(np.asarray(got, np.float64) - ref)
+                 / np.maximum(np.abs(ref), 1))
+    assert rel < 2e-2, rel
+
+
+def test_multipass_linrec_three_launches_match_reference():
+    import jax.numpy as jnp
+
+    from repro.kernels.scan.ref import scan_linrec_assoc_ref
+    wl = Workload(op="scan", n=512, batch=4, variant="linrec")
+    cfg = {"tile_n": 64, "rows_per_program": 2, "radix": 2}
+    plan = build_plan(wl, cfg, seq_limit=4)
+    assert plan.kind == "multipass" and plan.passes == 3
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.uniform(0.8, 0.99, size=(4, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4, 512)), jnp.float32)
+    with driver.capture_launches() as rec:
+        got = driver.multipass_linrec(a, b, plan, interpret=True)
+    assert len(rec) == 3
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(scan_linrec_assoc_ref(a, b)),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_four_step_fft_launches_match_plan():
+    import jax.numpy as jnp
+
+    from repro.kernels.fft.ops import fft
+    from repro.kernels.fft.ref import fft_ref
+    n = 768                                   # past the resident tile cap
+    wl = Workload(op="large_fft", n=n, batch=2, variant="stockham")
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, n)) + 1j * rng.normal(size=(2, n)),
+                    jnp.complex64)
+    cfg = {"radix": 4, "rows_per_program": 4, "tile_n": 4096}
+    from repro.core.multikernel import max_resident_tile
+    plan = plan_for(wl, normalizer_for("large_fft")(cfg, wl, None),
+                    max_tile=max_resident_tile(
+                        Workload(op="fft", n=n, batch=2, variant="stockham")))
+    with driver.capture_launches() as rec:
+        got = fft(x, config=cfg, interpret=True)
+    assert len(rec) == plan.passes == len(plan.launches)
+    assert [l.grid for l in rec] == [l.grid for l in plan.launches]
+    ref = np.asarray(fft_ref(x))
+    err = np.max(np.abs(np.asarray(got) - ref)) / np.max(np.abs(ref))
+    assert err < 1e-3
+
+
+def test_lf_multipass_matches_lf():
+    import jax
+
+    from repro.kernels.tridiag import ops
+    from repro.kernels.tridiag.ref import random_system
+    a, b, c, d = random_system(jax.random.PRNGKey(11), 4, 256)
+    base = np.asarray(ops.lf_solve(a, b, c, d))
+    got = np.asarray(ops.lf_solve_multipass(a, b, c, d, use_pallas=True,
+                                            interpret=True))
+    np.testing.assert_allclose(got, base, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Model conformance: analytical + featurizer read the plan
+# ---------------------------------------------------------------------------
+
+def test_resources_are_plan_resources():
+    from repro.core.analytical import resources
+    for wl in _WORKLOADS:
+        space = build_space(wl)
+        for cfg in space.enumerate_valid()[:8]:
+            assert resources(space, cfg) == plan_for(wl, cfg).resources()
+
+
+def test_features_expose_plan_fields():
+    from repro.tuning.ml.features import FEATURE_NAMES, featurize
+    wl = Workload(op="scan", n=256, batch=8, variant="ks")
+    space = build_space(wl)
+    cfg = {"tile_n": 128, "rows_per_program": 2, "radix": 8, "unroll": 1,
+           "in_register": 0}
+    row = dict(zip(FEATURE_NAMES, featurize(space, cfg)))
+    plan = plan_for(wl, cfg)
+    assert row["log2_passes"] == math.log2(plan.passes) if plan.passes > 1 \
+        else row["log2_passes"] == 0.0
+    assert row["log2_seq_tiles"] == math.log2(plan.seq_tiles)
+    assert row["ragged_tail"] == (1.0 if plan.ragged else 0.0)
+    assert row["steps_per_pass"] == plan.stage_count
