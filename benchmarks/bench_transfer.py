@@ -1,0 +1,138 @@
+"""Cross-device transfer seeding: warm-start value, quantified (the gate).
+
+For each benchmark workload the tpu_v5e exhaustive sweep is journaled, then
+a *target* device (gpu_sm) tunes the same workload twice with the same
+budget and seed:
+
+  * **cold** — TransferBayesianTuner with no prior histories (a plain
+    Bayesian search: the baseline every device pays without the subsystem);
+  * **warm** — ``strategy="transfer"``: the same tuner seeded from the
+    source device's journal, profile-distance-reweighted
+    (``repro.core.transfer``).
+
+The metric is evaluations-to-optimum — how many objective evaluations the
+search spends before first measuring the target device's exhaustive
+winner (a search that never reaches it is charged its full budget).  The
+CI gate asserts the warm total is at most half the cold total: transfer
+seeding must at least double convergence speed, or the subsystem is not
+paying for itself.
+
+Standalone (the CI bench-smoke invocation):
+
+  PYTHONPATH=src:. python benchmarks/bench_transfer.py \
+      --json BENCH_transfer.json [--smoke]
+
+exits non-zero when the gate fails; ``run.py --only transfer`` emits the
+same rows as a section.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+from typing import List, Optional
+
+from repro.core import CachedObjective, CostModelObjective, Workload, \
+    build_space
+from repro.core.exhaustive import ExhaustiveSearch
+from repro.core.transfer import TransferBayesianTuner, transfer_strategy
+from repro.evaluation import evals_to_optimum
+from repro.hw.profiles import get_profile
+
+SOURCE_PROFILE = "tpu_v5e"
+TARGET_PROFILE = "gpu_sm"
+
+# warm total evals-to-optimum must be <= this fraction of the cold total
+GATE_RATIO = 0.50
+
+CASES = [("scan", "lf", 256), ("scan", "lf", 1024),
+         ("tridiag", "wm", 256), ("fft", "stockham", 256)]
+SMOKE_CASES = [("scan", "lf", 256), ("tridiag", "wm", 256)]
+
+MAX_EVALS = 32
+
+
+def run(emit, seed: int = 0, smoke: bool = False,
+        journal_dir: Optional[str] = None) -> List[str]:
+    """Emit transfer rows; returns gate-failure strings (empty = pass)."""
+    src = get_profile(SOURCE_PROFILE)
+    dst = get_profile(TARGET_PROFILE)
+    journal_dir = journal_dir or tempfile.mkdtemp(prefix="repro_bench_xfer_")
+    cases = SMOKE_CASES if smoke else CASES
+    seeds = [seed] if smoke else [seed, seed + 1, seed + 2]
+
+    cold_total = 0
+    warm_total = 0
+    for op, variant, n in cases:
+        wl = Workload(op=op, n=n, batch=max(2 ** 20 // n, 1), variant=variant)
+
+        # source device: journal the exhaustive sweep (what transfer reads)
+        ExhaustiveSearch(journal_dir=journal_dir).tune(
+            build_space(wl, spec=src), CostModelObjective(src))
+
+        # target device: ground-truth optimum, then cold vs warm search
+        space = build_space(wl, spec=dst)
+        ex = ExhaustiveSearch().tune(space, CostModelObjective(dst))
+        for s in seeds:
+            cold = TransferBayesianTuner(seed=s, max_evals=MAX_EVALS).tune(
+                space, CachedObjective(CostModelObjective(dst)), ())
+            warm = transfer_strategy(
+                space, CachedObjective(CostModelObjective(dst)),
+                seed=s, max_evals=MAX_EVALS, journal_dir=journal_dir)
+            # a search that never measured the optimum pays its full budget
+            c = evals_to_optimum(cold.history, ex.best_time) or MAX_EVALS
+            w = evals_to_optimum(warm.history, ex.best_time) or MAX_EVALS
+            cold_total += c
+            warm_total += w
+            emit(f"transfer,{op},{variant},{n},cold_seed{s},evals_to_opt,"
+                 f"{c},{len(ex.history)}")
+            emit(f"transfer,{op},{variant},{n},warm_seed{s},evals_to_opt,"
+                 f"{w},{len(ex.history)}")
+
+    ratio = warm_total / max(cold_total, 1)
+    emit(f"transfer,ALL,,,warm_vs_cold,evals_ratio,{ratio:.4f},"
+         f"gate<={GATE_RATIO}")
+    failures: List[str] = []
+    if ratio > GATE_RATIO:
+        failures.append(
+            f"transfer seeding too weak: warm evals-to-optimum "
+            f"{warm_total} > {GATE_RATIO:.0%} of cold {cold_total} "
+            f"(ratio {ratio:.3f})")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Cross-device transfer seeding benchmark + gate")
+    ap.add_argument("--json", default=None,
+                    help="write the rows + gate verdict here "
+                         "(e.g. BENCH_transfer.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced case/seed matrix for CI")
+    args = ap.parse_args(argv)
+
+    rows: List[str] = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    failures = run(emit, seed=args.seed, smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "transfer", "seed": args.seed,
+                       "smoke": bool(args.smoke),
+                       "source": SOURCE_PROFILE, "target": TARGET_PROFILE,
+                       "gate_ratio": GATE_RATIO, "rows": rows,
+                       "failures": failures},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    for failure in failures:
+        print(f"[bench-transfer] FAIL: {failure}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,16 +13,17 @@ from repro.core.analytical import AnalyticalTuner
 from repro.core.bayesian import BayesianTuner, TuneResult
 from repro.core.exhaustive import ExhaustiveSearch, RandomSearch
 from repro.core.metrics import efficiency, phi, phi_from_times
-from repro.core.objective import (CachedObjective, Measurement, Objective,
-                                  PENALTY_TIME, TPUCostModelObjective,
-                                  WallClockObjective)
+from repro.core.objective import (CachedObjective, CostModelObjective,
+                                  Measurement, Objective, PENALTY_TIME,
+                                  TPUCostModelObjective, WallClockObjective)
 from repro.core.space import Config, ParamSpec, SearchSpace, Workload, build_space
 from repro.core.tuner import TuningDB, get_config, global_db, tune_offline
 
 __all__ = [
     "AnalyticalTuner", "BayesianTuner", "TuneResult", "ExhaustiveSearch",
     "RandomSearch", "efficiency", "phi", "phi_from_times", "CachedObjective",
-    "Measurement", "Objective", "PENALTY_TIME", "TPUCostModelObjective",
+    "Measurement", "Objective", "PENALTY_TIME", "CostModelObjective",
+    "TPUCostModelObjective",
     "WallClockObjective", "Config", "ParamSpec", "SearchSpace", "Workload",
     "build_space", "TuningDB", "get_config", "global_db", "tune_offline",
 ]

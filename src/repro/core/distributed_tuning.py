@@ -28,7 +28,7 @@ from repro.core.bayesian import BayesianTuner, TuneResult
 from repro.core.exhaustive import ExhaustiveSearch
 from repro.core.objective import Measurement, Objective, PENALTY_TIME
 from repro.core.space import Config, ParamSpec, SearchSpace, Workload
-from repro.hw.tpu import V5E
+from repro.hw.profiles import TPU_V5E as V5E
 
 
 def distributed_space(arch: str, shape: str, is_moe: bool = False,

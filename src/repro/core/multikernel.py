@@ -21,7 +21,7 @@ from repro.core.analytical import AnalyticalTuner
 from repro.core.objective import Measurement, Objective, PENALTY_TIME, TPUCostModelObjective
 from repro.core.space import (Config, ParamSpec, SearchSpace, Workload,
                               build_space, large_fft_space, pow2_range)
-from repro.hw.tpu import V5E, dtype_bytes
+from repro.hw.profiles import active_profile, dtype_bytes
 
 
 def num_passes(n: int, tile_n: int, radix: int = 2) -> int:
@@ -29,7 +29,7 @@ def num_passes(n: int, tile_n: int, radix: int = 2) -> int:
     return max(1, math.ceil(math.log2(max(n, 2)) / math.log2(max(tile_n, 2))))
 
 
-def max_resident_tile(wl: Workload, spec=V5E) -> int:
+def max_resident_tile(wl: Workload, spec=None) -> int:
     """Largest power-of-two tile whose double-buffered footprint fits VMEM
     with at least one problem row per program (delegates to the StagePlan
     layer, which uses the same boundary to decide fused vs multi-pass)."""
@@ -58,7 +58,7 @@ class MultiPassPlan:
         return t
 
 
-def analytical_multipass(wl: Workload, spec=V5E) -> MultiPassPlan:
+def analytical_multipass(wl: Workload, spec=None) -> MultiPassPlan:
     """Paper rule: pick the largest S (minimize m), then per-pass guideline."""
     tile = max_resident_tile(wl, spec)
     m = num_passes(wl.n, tile)
@@ -109,8 +109,12 @@ class MultiPassObjective(Objective):
                 return Measurement(PENALTY_TIME, False)
             total += meas.time_s
             elems_left = max(elems_left // tile, 1)
-        # inter-pass HBM transpose roundtrip
+        # inter-pass HBM transpose roundtrip (billed at the device the inner
+        # objective models; active profile when the inner carries no spec)
+        spec = getattr(self.inner, "spec", None)
+        if spec is None:
+            spec = active_profile()
         eb = dtype_bytes(wl.dtype) * (2 if wl.op in ("fft", "large_fft") else 1)
-        roundtrip = 2.0 * wl.n * max(wl.batch, 1) * eb / V5E.hbm_bandwidth
+        roundtrip = 2.0 * wl.n * max(wl.batch, 1) * eb / spec.hbm_bandwidth
         total += (m - 1) * roundtrip
         return Measurement(total, True, meta)

@@ -26,9 +26,9 @@ from typing import Callable, Dict, Optional, Sequence
 import numpy as np
 
 from repro.core.space import Config, SearchSpace, Workload
-from repro.hw.tpu import (
-    V5E,
-    TpuSpec,
+from repro.hw.profiles import (
+    HardwareProfile,
+    active_profile,
     dma_efficiency,
     dma_efficiency_arr,
     effective_element_bytes,
@@ -302,18 +302,24 @@ def _batch_work(wl: Workload, cfgs: Sequence[Config],
     return out
 
 
-class TPUCostModelObjective(Objective):
-    """Deterministic v5e timing model (+ optional hash-seeded jitter).
+class CostModelObjective(Objective):
+    """Deterministic timing model for a hardware profile (+ optional jitter).
 
     t = passes * [ launch + max(t_compute, t_memory)/overlap + steps*sync ]
 
-    with: t_memory from bytes moved through the DMA ramp; t_compute from VPU
-    issue with lane/sublane utilization and ILP factors; overlap in (0.5,1]
-    grows with grid depth (needs >=2 programs in flight to double-buffer).
+    with: t_memory from bytes moved through the DMA ramp; t_compute from
+    vector-unit issue with lane/sublane utilization and ILP factors (matrix
+    unit for matmul/attention); overlap in (0.5,1] grows with grid depth
+    (needs >=2 programs in flight to double-buffer). Every architectural
+    constant comes from the :class:`~repro.hw.profiles.HardwareProfile`, so
+    the same model retargets by swapping the profile — the paper's
+    portability mechanism. Under ``tpu_v5e`` the arithmetic is bit-identical
+    to the historical ``TPUCostModelObjective`` (pinned by fixture test).
     """
 
-    def __init__(self, spec: TpuSpec = V5E, noise: float = 0.0):
-        self.spec = spec
+    def __init__(self, spec: Optional[HardwareProfile] = None,
+                 noise: float = 0.0):
+        self.spec = spec if spec is not None else active_profile()
         self.noise = noise
 
     def _jitter(self, wl: Workload, cfg: Config) -> float:
@@ -367,7 +373,8 @@ class TPUCostModelObjective(Objective):
         else:
             util = lane_utilization(trailing, spec)
             sub = sublane_utilization(rows * max(tile_n // spec.lane_count, 1), spec)
-            eff = max(util * max(sub, 0.25) * ilp_factor(cfg.get("unroll", 1)), 1e-3)
+            eff = max(util * max(sub, 0.25)
+                      * ilp_factor(cfg.get("unroll", 1), spec), 1e-3)
             t_comp = total_flops / (spec.peak_vpu_flops * eff)
             if cfg.get("in_register"):
                 t_comp *= 0.8   # no scratch roundtrip between steps
@@ -388,7 +395,12 @@ class TPUCostModelObjective(Objective):
         )
 
     def signature(self) -> str:
-        return f"tpu_cost:{self.spec.name}:noise={self.noise}"
+        # the historical "tpu_cost:tpu_v5e:..." form is kept for tpu_v5e so
+        # pre-profile sweep journals stay resumable; other profiles get
+        # their own namespace — a journal measured on one profile can never
+        # satisfy the signature check under another
+        prefix = "tpu_cost" if self.spec.name == "tpu_v5e" else "cost"
+        return f"{prefix}:{self.spec.name}:noise={self.noise}"
 
     def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
                    assume_valid: bool = False) -> np.ndarray:
@@ -449,7 +461,7 @@ class TPUCostModelObjective(Objective):
                     rows * np.maximum(np.floor(tile_n / spec.lane_count), 1),
                     spec)
                 eff = np.maximum(util * np.maximum(sub, 0.25)
-                                 * ilp_factor_arr(cols.get("unroll", 1)),
+                                 * ilp_factor_arr(cols.get("unroll", 1), spec),
                                  1e-3)
                 t_comp = total_flops / (spec.peak_vpu_flops * eff)
                 t_comp = np.where(in_reg, t_comp * 0.8,
@@ -474,6 +486,11 @@ class TPUCostModelObjective(Objective):
         return t
 
 
+# Backwards-compatible name: the objective predates the profile layer and
+# much of the stack (and its journals' signatures) grew up calling it this.
+TPUCostModelObjective = CostModelObjective
+
+
 class CachedObjective(Objective):
     """Memoizes measurements — searches may revisit configs."""
 
@@ -481,6 +498,12 @@ class CachedObjective(Objective):
         self.inner = inner
         self.cache: Dict[str, Measurement] = {}
         self.evaluations = 0   # counts *unique* real evaluations (paper Fig 4)
+
+    @property
+    def spec(self) -> Optional[HardwareProfile]:
+        """The inner objective's hardware profile, when it models one
+        (journal headers record it; wallclock objectives have none)."""
+        return getattr(self.inner, "spec", None)
 
     def __call__(self, space: SearchSpace, cfg: Config) -> Measurement:
         key = f"{space.workload.key}|{tuple(sorted(cfg.items()))}"

@@ -14,13 +14,14 @@ computable.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import itertools
 import math
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.hw.tpu import V5E, TpuSpec, dtype_bytes
+from repro.hw.profiles import HardwareProfile, active_profile, dtype_bytes
 
 Config = Dict[str, int]
 
@@ -95,7 +96,10 @@ class SearchSpace:
     workload: Workload
     params: Sequence[ParamSpec]
     constraints: Sequence[Callable[[Config, Workload], bool]] = ()
-    spec: TpuSpec = V5E
+    # the hardware profile whose limits bound this space (validity
+    # constraints capture it at build time; consumers read it for
+    # budgets/geometry). Defaults to the process-wide active profile.
+    spec: HardwareProfile = dataclasses.field(default_factory=active_profile)
     # memoized enumerate_valid(): every consumer (sweep, analytical rank,
     # strategies, featurizer) re-enumerates the same space; the constraint
     # closures are the expensive part, not the product itself
@@ -149,17 +153,20 @@ class SearchSpace:
 # Constraint builders shared by the kernel spaces
 # ---------------------------------------------------------------------------
 
-def vmem_fits(bytes_per_elem: int, buffers: int = 2):
-    """Double-buffered VMEM footprint must fit the budget.
+def vmem_fits(bytes_per_elem: int, buffers: int = 2,
+              spec: Optional[HardwareProfile] = None):
+    """Double-buffered fast-memory footprint must fit the profile's budget.
 
     footprint = rows_per_program * tile_n * bytes_per_elem * buffers
-    The analogue of the paper's 48KB shared-memory-per-block constraint.
+    The analogue of the paper's 48KB shared-memory-per-block constraint
+    (which is literally what it becomes under the ``gpu_sm`` profile).
     """
+    spec = spec if spec is not None else active_profile()
 
     def check(cfg: Config, wl: Workload) -> bool:
         tile_n = cfg.get("tile_n", wl.n)
         rows = cfg.get("rows_per_program", 1)
-        return rows * tile_n * bytes_per_elem * buffers <= V5E.vmem_budget
+        return rows * tile_n * bytes_per_elem * buffers <= spec.vmem_budget
 
     return check
 
@@ -197,14 +204,15 @@ def radix_compatible():
     return check
 
 
-def in_register_rule():
+def in_register_rule(spec: Optional[HardwareProfile] = None):
     """`in_register` (shuffle analogue) only when one problem row fits a VREG
     tile region: n <= 8 lanes*sublanes worth of data we keep resident."""
+    spec = spec if spec is not None else active_profile()
 
     def check(cfg: Config, wl: Workload) -> bool:
         if not cfg.get("in_register", 0):
             return True
-        return wl.n <= V5E.lane_count * V5E.sublane_count
+        return wl.n <= spec.lane_count * spec.sublane_count
 
     return check
 
@@ -213,7 +221,9 @@ def in_register_rule():
 # Per-operation space declarations (paper Table I, adapted per DESIGN.md §2)
 # ---------------------------------------------------------------------------
 
-def scan_space(wl: Workload) -> SearchSpace:
+def scan_space(wl: Workload,
+               spec: Optional[HardwareProfile] = None) -> SearchSpace:
+    spec = spec if spec is not None else active_profile()
     eb = dtype_bytes(wl.dtype)
     max_rows = floor_pow2(min(512, max(wl.batch, 1)))
     # variant-aware knob pruning: the linrec kernel's fold order is fixed
@@ -232,21 +242,26 @@ def scan_space(wl: Workload) -> SearchSpace:
         wl,
         params,
         constraints=(
-            vmem_fits(eb),
+            vmem_fits(eb, spec=spec),
             tile_divides_n(),
             rows_divide_batch(),
             radix_compatible(),
-            in_register_rule(),
+            in_register_rule(spec),
         ),
+        spec=spec,
     )
 
 
-def linrec_space(wl: Workload) -> SearchSpace:
+def linrec_space(wl: Workload,
+                 spec: Optional[HardwareProfile] = None) -> SearchSpace:
     """Scan space with the linrec-dead knobs pruned (rglru & friends)."""
-    return scan_space(dataclasses.replace(wl, variant=wl.variant or "linrec"))
+    return scan_space(dataclasses.replace(wl, variant=wl.variant or "linrec"),
+                      spec)
 
 
-def tridiag_space(wl: Workload) -> SearchSpace:
+def tridiag_space(wl: Workload,
+                  spec: Optional[HardwareProfile] = None) -> SearchSpace:
+    spec = spec if spec is not None else active_profile()
     # each element is an equation: 4 coefficients (a,b,c,d)
     eb = 4 * dtype_bytes(wl.dtype)
     if wl.variant in ("cr", "lf", "thomas"):
@@ -259,7 +274,8 @@ def tridiag_space(wl: Workload) -> SearchSpace:
             ParamSpec("unroll", (1,)),
             ParamSpec("in_register", (0,)),
         ]
-        return SearchSpace(wl, params, constraints=(vmem_fits(eb),))
+        return SearchSpace(wl, params, constraints=(vmem_fits(eb, spec=spec),),
+                           spec=spec)
     max_rows = floor_pow2(min(256, max(wl.batch, 1)))
     radix_dom = (2, 4, 8) if wl.variant == "wm" else (2,)  # paper: only WM retunes r
     # wm runs as an XLA chunked prefix: rows/unroll/in_register shape
@@ -278,15 +294,18 @@ def tridiag_space(wl: Workload) -> SearchSpace:
         wl,
         params,
         constraints=(
-            vmem_fits(eb),
+            vmem_fits(eb, spec=spec),
             rows_divide_batch(),
             radix_compatible(),
-            in_register_rule(),
+            in_register_rule(spec),
         ),
+        spec=spec,
     )
 
 
-def fft_space(wl: Workload) -> SearchSpace:
+def fft_space(wl: Workload,
+              spec: Optional[HardwareProfile] = None) -> SearchSpace:
+    spec = spec if spec is not None else active_profile()
     eb = 2 * dtype_bytes(wl.dtype)  # complex: interleaved re/im
     max_rows = floor_pow2(min(256, max(wl.batch, 1)))
     params = [
@@ -299,16 +318,20 @@ def fft_space(wl: Workload) -> SearchSpace:
     return SearchSpace(
         wl,
         params,
-        constraints=(vmem_fits(eb), rows_divide_batch(), radix_compatible()),
+        constraints=(vmem_fits(eb, spec=spec), rows_divide_batch(),
+                     radix_compatible()),
+        spec=spec,
     )
 
 
-def large_fft_space(wl: Workload, max_tile: int = 4096) -> SearchSpace:
+def large_fft_space(wl: Workload, max_tile: int = 4096,
+                    spec: Optional[HardwareProfile] = None) -> SearchSpace:
     """Multi-pass FFT (paper §IV-C): N exceeds the on-chip tile -> m passes.
 
     The space covers (tile_n per pass, radix per pass, rows). tile_n here is
     the per-pass working-set S; m = ceil(log(N)/log(S)).
     """
+    spec = spec if spec is not None else active_profile()
     eb = 2 * dtype_bytes(wl.dtype)
     max_rows = floor_pow2(min(64, max(wl.batch, 1)))
     tiles = tuple(v for v in pow2_range(256, max_tile))
@@ -326,15 +349,19 @@ def large_fft_space(wl: Workload, max_tile: int = 4096) -> SearchSpace:
     return SearchSpace(
         wl,
         params,
-        constraints=(vmem_fits(eb), rows_divide_batch(), radix_compatible(), tile_le_n),
+        constraints=(vmem_fits(eb, spec=spec), rows_divide_batch(),
+                     radix_compatible(), tile_le_n),
+        spec=spec,
     )
 
 
-def attention_space(wl: Workload) -> SearchSpace:
+def attention_space(wl: Workload,
+                    spec: Optional[HardwareProfile] = None) -> SearchSpace:
     """Flash-attention block sizes (beyond-paper application of the method).
 
     wl.n = kv sequence length; wl.batch = #(batch*heads) rows.
     """
+    spec = spec if spec is not None else active_profile()
     params = [
         ParamSpec("block_q", (128, 256, 512, 1024)),
         ParamSpec("block_k", (128, 256, 512, 1024, 2048)),
@@ -350,13 +377,16 @@ def attention_space(wl: Workload) -> SearchSpace:
         # q-block + k-block + v-block + scores
         foot = (cfg["block_q"] + 2 * cfg["block_k"]) * head_dim * eb
         foot += cfg["block_q"] * cfg["block_k"] * 4
-        return foot * 2 <= V5E.vmem_budget and cfg["block_k"] <= w.n and cfg["block_q"] <= w.n
+        return foot * 2 <= spec.vmem_budget and cfg["block_k"] <= w.n \
+            and cfg["block_q"] <= w.n
 
-    return SearchSpace(wl, params, constraints=(blocks_fit,))
+    return SearchSpace(wl, params, constraints=(blocks_fit,), spec=spec)
 
 
-def matmul_space(wl: Workload) -> SearchSpace:
+def matmul_space(wl: Workload,
+                 spec: Optional[HardwareProfile] = None) -> SearchSpace:
     """Tiled matmul (M=batch, K=N=wl.n simplification for tuning demos)."""
+    spec = spec if spec is not None else active_profile()
     params = [
         ParamSpec("block_m", (128, 256, 512)),
         ParamSpec("block_n", (128, 256, 512, 1024)),
@@ -367,9 +397,9 @@ def matmul_space(wl: Workload) -> SearchSpace:
         eb = 2
         foot = (cfg["block_m"] * cfg["block_k"] + cfg["block_k"] * cfg["block_n"]) * eb
         foot += cfg["block_m"] * cfg["block_n"] * 4
-        return foot * 2 <= V5E.vmem_budget
+        return foot * 2 <= spec.vmem_budget
 
-    return SearchSpace(wl, params, constraints=(fits,))
+    return SearchSpace(wl, params, constraints=(fits,), spec=spec)
 
 
 _SPACE_BUILDERS: Dict[str, Callable[[Workload], SearchSpace]] = {
@@ -384,12 +414,27 @@ _SPACE_BUILDERS: Dict[str, Callable[[Workload], SearchSpace]] = {
 }
 
 
-def build_space(wl: Workload) -> SearchSpace:
+def build_space(wl: Workload,
+                spec: Optional[HardwareProfile] = None) -> SearchSpace:
+    """Search space for ``wl`` bounded by ``spec`` (default: active profile).
+
+    Externally registered builders that predate the profile layer may not
+    take a ``spec`` argument; they are called without one and keep their
+    own bounds.
+    """
     try:
         builder = _SPACE_BUILDERS[wl.op]
     except KeyError:
         raise KeyError(f"no search space registered for op={wl.op!r}") from None
-    return builder(wl)
+    if spec is None:
+        return builder(wl)
+    try:
+        params = inspect.signature(builder).parameters
+        accepts_spec = "spec" in params or any(
+            p.kind is p.VAR_KEYWORD for p in params.values())
+    except (TypeError, ValueError):
+        accepts_spec = False
+    return builder(wl, spec=spec) if accepts_spec else builder(wl)
 
 
 def register_space(op: str, builder: Callable[[Workload], SearchSpace]) -> None:

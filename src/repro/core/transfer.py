@@ -1,4 +1,4 @@
-"""Transfer tuning: multi-task warm-starting of the BO search (paper §IV-B).
+"""Transfer tuning: cross-size AND cross-device warm-starting (paper §IV-B).
 
 The paper uses GPTune, whose Linear Coregionalization Model shares a
 surrogate ACROSS tasks (problem sizes), so tuning size N starts from what
@@ -10,11 +10,28 @@ amortizing evaluations across repeated invocations of a routine family.
 
 Task encoding: log2(N) normalized over the family's size range; the task
 kernel is RBF over that coordinate, so closer sizes transfer more.
+
+With the hardware-profile subsystem the module also earns its name
+cross-*device* (Xue & Roy's cross-GPU CFD result, PAPERS.md): sweep
+journals recorded on device A become prior histories for device B's
+search. Absolute seconds do not transfer between machines, so each source
+journal is normalized to per-journal *slowdowns* (t / min t — the
+scale-free ranking), then reweighted by profile distance: slowdowns are
+flattened toward 1.0 by ``exp(-profile_distance(src, dst))``, so a near
+twin transfers its full ranking while a wildly different device
+contributes almost nothing. ``transfer_seed`` drives a whole session from
+foreign journals; ``transfer_strategy`` is the same path registered as
+``strategy="transfer"``.
+
+Histories from a different op family are rejected: the task kernel only
+sees log2(N), so an FFT history at the same N would silently pollute a
+scan search (regression-tested).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -22,6 +39,15 @@ import numpy as np
 from repro.core.bayesian import GP, TuneResult, expected_improvement
 from repro.core.objective import Objective, PENALTY_TIME
 from repro.core.space import Config, SearchSpace, Workload, build_space
+from repro.hw.profiles import HardwareProfile, get_profile, profile_distance
+
+# ops that share one kernel family (and therefore one knob semantics); a
+# history transfers inside a family, never across families
+_FAMILY_POOL = {"ssd": "scan", "rglru": "scan"}
+
+
+def op_family(op: str) -> str:
+    return _FAMILY_POOL.get(op, op)
 
 
 @dataclasses.dataclass
@@ -54,6 +80,12 @@ class TransferBayesianTuner:
         candidates = space.enumerate_valid()
         if not candidates:
             raise ValueError("empty space")
+        # family guard: the task kernel only sees log2(N) — an FFT history
+        # at the same N would otherwise enter a scan search's prior with
+        # full weight and steer the bootstrap toward foreign-knob optima
+        fam = op_family(space.workload.op)
+        histories = [h for h in histories
+                     if op_family(h.workload.op) == fam]
         enc = np.array([space.encode(c) for c in candidates])
         t_here = self._task_coord(space.workload)
         enc_aug = np.concatenate(
@@ -130,6 +162,155 @@ class TransferBayesianTuner:
                 else "exhausted"
         return TuneResult(candidates[best_idx], best_t, len(evaluated),
                           history, stopped)
+
+
+# ---------------------------------------------------------------------------
+# Cross-device transfer (profile-distance-weighted journal seeding)
+# ---------------------------------------------------------------------------
+
+def _journal_profile(header: Dict) -> Optional[str]:
+    """Source profile of a journal: the v2 header field, else parsed from
+    the legacy cost-model signature ("tpu_cost:<name>:noise=...")."""
+    name = header.get("profile")
+    if name:
+        return str(name)
+    sig = str(header.get("objective", ""))
+    parts = sig.split(":")
+    if len(parts) >= 3 and parts[0] in ("tpu_cost", "cost"):
+        return parts[1]
+    return None
+
+
+def _journal_workload(header: Dict) -> Optional[Workload]:
+    wl = header.get("workload") or {}
+    try:
+        return Workload(op=wl["op"], n=int(wl["n"]),
+                        batch=int(wl.get("batch", 1)),
+                        dtype=wl.get("dtype", "float32"),
+                        variant=wl.get("variant", ""))
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def journal_history(path: str, target: HardwareProfile
+                    ) -> Optional[Tuple[TaskHistory, float]]:
+    """One journal -> (profile-distance-reweighted TaskHistory, weight).
+
+    Times become per-journal slowdowns (t / min t) flattened toward 1.0 by
+    ``w = exp(-profile_distance(src, target))``: the scale-free ranking of
+    a close device transfers almost fully; a distant one barely at all.
+    Returns None for unreadable journals, unknown source profiles, or
+    journals measured on ``target`` itself (those are resumable directly —
+    nothing to transfer).
+    """
+    from repro.tuning.sweep import SweepJournal
+
+    j = SweepJournal(path)
+    header = j.read_header()
+    if header is None:
+        return None
+    src_name = _journal_profile(header)
+    wl = _journal_workload(header)
+    if src_name is None or wl is None or src_name == target.name:
+        return None
+    try:
+        src = get_profile(src_name)
+    except ValueError:
+        return None
+    entries = [(c, t) for c, t in j.entries() if t < PENALTY_TIME]
+    if not entries:
+        return None
+    tmin = min(t for _, t in entries)
+    w = math.exp(-profile_distance(src, target))
+    hist = TaskHistory(
+        wl, [c for c, _ in entries],
+        [1.0 + (t / tmin - 1.0) * w for _, t in entries])
+    return hist, w
+
+
+def device_histories(journal_dir: str, wl: Workload,
+                     target: HardwareProfile) -> List[TaskHistory]:
+    """Other devices' sweep histories for ``wl``, reweighted for ``target``.
+
+    Scans ``journal_dir`` for journals of the same workload recorded under
+    a different profile (the per-(workload, objective) file naming makes
+    them coexist in one directory).
+    """
+    from repro.tuning.sweep import _safe
+
+    if not journal_dir or not os.path.isdir(journal_dir):
+        return []
+    prefix = _safe(wl.key) + "__"
+    out: List[TaskHistory] = []
+    for name in sorted(os.listdir(journal_dir)):
+        if not (name.startswith(prefix) and name.endswith(".jsonl")):
+            continue
+        got = journal_history(os.path.join(journal_dir, name), target)
+        if got is None:
+            continue
+        hist, _ = got
+        if hist.workload.key == wl.key:
+            out.append(hist)
+    return out
+
+
+def transfer_strategy(space: SearchSpace, objective: Objective, *,
+                      seed: int = 0, max_evals: int = 64,
+                      journal_dir: Optional[str] = None) -> TuneResult:
+    """``strategy="transfer"``: warm-start from other devices' journals.
+
+    With no journal directory (or no foreign journals in it) this is a
+    cold Bayesian search — the strategy degrades, it never fails.
+    """
+    histories: Sequence[TaskHistory] = ()
+    if journal_dir:
+        histories = device_histories(journal_dir, space.workload, space.spec)
+    return TransferBayesianTuner(seed=seed, max_evals=max_evals).tune(
+        space, objective, histories)
+
+
+def transfer_seed(session, journals, *, max_evals: int = 16, seed: int = 0,
+                  store: bool = True) -> Dict[str, TuneResult]:
+    """Warm-start ``session``'s device from another device's sweep journals.
+
+    ``journals`` is an iterable of journal paths and/or directories (a
+    directory contributes every ``*.jsonl`` inside). For each foreign
+    journal the workload is rebuilt from its header, the recorded sweep
+    becomes a profile-distance-weighted prior, and a short transfer search
+    runs on the session's profile; winners land in the session's TuningDB
+    under ``method="transfer"``. Returns ``{workload key: TuneResult}``.
+    """
+    from repro.core.objective import CachedObjective, CostModelObjective
+    from repro.tuning.sweep import SweepJournal
+
+    paths: List[str] = []
+    for j in journals:
+        if os.path.isdir(j):
+            paths.extend(os.path.join(j, n) for n in sorted(os.listdir(j))
+                         if n.endswith(".jsonl"))
+        else:
+            paths.append(j)
+
+    out: Dict[str, TuneResult] = {}
+    for path in paths:
+        header = SweepJournal(path).read_header()
+        wl = _journal_workload(header) if header else None
+        if wl is None:
+            continue
+        got = journal_history(path, session.spec)
+        if got is None:
+            continue
+        hist, _ = got
+        space = build_space(wl, spec=session.spec)
+        cached = CachedObjective(CostModelObjective(session.spec))
+        res = TransferBayesianTuner(seed=seed, max_evals=max_evals).tune(
+            space, cached, (hist,))
+        if store:
+            session.db.store(wl, res.best_config, res.best_time, "transfer",
+                             res.evaluations)
+            session.invalidate(wl)
+        out[wl.key] = res
+    return out
 
 
 def tune_family(op: str, variant: str, sizes: Sequence[int],

@@ -2,9 +2,15 @@
 
 ``repro.evaluation.compare`` reproduces the paper's Table-II-style
 comparison: every tuning methodology scored against the exhaustive
-optimum (Phi, mean slowdown, evaluation counts).
+optimum (Phi, mean slowdown, evaluation counts), plus the per-(device,
+method) matrix over hardware profiles (the portability story).
 """
-from repro.evaluation.compare import (check_report, compare_methods,
+from repro.evaluation.compare import (check_matrix, check_report,
+                                      compare_methods,
+                                      compare_methods_matrix,
+                                      evals_to_optimum, format_matrix,
                                       format_report)
 
-__all__ = ["check_report", "compare_methods", "format_report"]
+__all__ = ["check_report", "compare_methods", "format_report",
+           "compare_methods_matrix", "check_matrix", "format_matrix",
+           "evals_to_optimum"]

@@ -23,14 +23,34 @@ from __future__ import annotations
 from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 from repro.core.exhaustive import ExhaustiveSearch
-from repro.core.objective import CachedObjective, Objective, TPUCostModelObjective
+from repro.core.objective import (CachedObjective, CostModelObjective,
+                                  Objective)
 from repro.core.space import Workload, build_space
+from repro.hw.profiles import HardwareProfile, get_profile
 from repro.tuning.session import get_strategy
 
 DEFAULT_METHODS = ("analytical", "ml", "online", "bayesian", "random")
 
+# device-matrix default: tpu_v5e first so its journals exist when the
+# transfer strategy runs on the other devices
+DEFAULT_MATRIX_PROFILES = ("tpu_v5e", "gpu_sm", "cpu_interpret")
+DEFAULT_MATRIX_METHODS = ("analytical", "bayesian", "transfer")
+
 # efficiencies this far above 1.0 are fp-noise, beyond it a violation
 EFFICIENCY_EPS = 1e-9
+
+
+def evals_to_optimum(history: Sequence[tuple], best_time: float) -> Optional[int]:
+    """Evaluations spent until the search first measured the optimum.
+
+    1-based index of the first history entry within fp-noise of
+    ``best_time`` (the exhaustive optimum); None when the search never
+    reached it — the matrix's evaluations-to-Phi<=1 cell.
+    """
+    for i, (_, t) in enumerate(history):
+        if t <= best_time * (1.0 + EFFICIENCY_EPS):
+            return i + 1
+    return None
 
 
 def _phi_raw(efficiencies: Sequence[float]) -> float:
@@ -43,7 +63,8 @@ def compare_methods(workloads: Iterable[Workload],
                     methods: Sequence[str] = DEFAULT_METHODS,
                     objective_factory: Optional[Callable[[], Objective]] = None,
                     *, seed: int = 0, max_evals: int = 20,
-                    journal_dir: Optional[str] = None) -> Dict:
+                    journal_dir: Optional[str] = None,
+                    profile: Optional[HardwareProfile] = None) -> Dict:
     """Run every methodology against the exhaustive optimum.
 
     One ``CachedObjective`` per workload is shared by the sweep and every
@@ -51,13 +72,16 @@ def compare_methods(workloads: Iterable[Workload],
     non-exhaustive strategies' repeat visits are cache hits, not new
     evaluations — their ``evaluations`` field still reports what each
     method would have paid standalone).
+
+    ``profile`` bounds the spaces and (absent an explicit factory) the
+    cost model by that device; default is the process-wide active profile.
     """
     rows: List[Dict] = []
     for wl in workloads:
         wl = wl.canonical()
-        space = build_space(wl)
+        space = build_space(wl, spec=profile)
         obj = CachedObjective(objective_factory() if objective_factory
-                              else TPUCostModelObjective())
+                              else CostModelObjective(profile))
         ex = ExhaustiveSearch(journal_dir=journal_dir).tune(space, obj)
         # journal-resumed configs never went through `obj` — seed the shared
         # cache with the sweep's times so every strategy reads the exact
@@ -65,25 +89,30 @@ def compare_methods(workloads: Iterable[Workload],
         # host would let a method "beat" exhaustive and trip the Phi gate)
         obj.seed(space, ex.history)
         row = {"workload": wl.key, "op": wl.op, "n": wl.n,
+               "profile": space.spec.name,
                "space_size": len(ex.history),
                "best_time_s": ex.best_time,
                "exhaustive_evaluations": ex.evaluations,
                "methods": {}}
         for name in methods:
             res = get_strategy(name)(space, obj, seed=seed,
-                                     max_evals=max_evals)
+                                     max_evals=max_evals,
+                                     journal_dir=journal_dir)
             eff = ex.best_time / res.best_time
             row["methods"][name] = {
                 "time_s": res.best_time,
                 "slowdown": res.best_time / ex.best_time,
                 "efficiency": eff,
                 "evaluations": res.evaluations,
+                "evals_to_optimum": evals_to_optimum(res.history,
+                                                     ex.best_time),
                 "stopped_by": res.stopped_by,
                 "config": dict(res.best_config),
             }
         rows.append(row)
 
     report = {"methods": list(methods), "workloads": rows,
+              "profile": rows[0]["profile"] if rows else None,
               "per_op": {}, "overall": {}, "violations": []}
 
     ops = sorted({r["op"] for r in rows})
@@ -101,12 +130,19 @@ def compare_methods(workloads: Iterable[Workload],
             }
         effs = [r["methods"][name]["efficiency"] for r in rows]
         slows = [r["methods"][name]["slowdown"] for r in rows]
+        reached = [r["methods"][name]["evals_to_optimum"] for r in rows
+                   if r["methods"][name]["evals_to_optimum"] is not None]
         report["overall"][name] = {
             "phi": _phi_raw(effs),
             "mean_slowdown": sum(slows) / len(slows),
             "max_slowdown": max(slows),
             "total_evaluations": sum(r["methods"][name]["evaluations"]
                                      for r in rows),
+            # evaluations-to-Phi<=1: how fast the method finds the optimum
+            # when it does, and on what fraction of workloads it does at all
+            "mean_evals_to_optimum": (sum(reached) / len(reached)
+                                      if reached else None),
+            "optimum_rate": len(reached) / len(rows),
             "n": len(rows),
         }
         for r in rows:
@@ -132,6 +168,67 @@ def check_report(report: Dict) -> List[str]:
             failures.append(f"overall Phi({name})={agg['phi']:.6f} > 1: "
                             f"exhaustive search was beaten")
     return failures
+
+
+# ---------------------------------------------------------------------------
+# Per-(device, method) matrix (the portability story, quantified)
+# ---------------------------------------------------------------------------
+
+def compare_methods_matrix(workloads: Iterable[Workload],
+                           methods: Sequence[str] = DEFAULT_MATRIX_METHODS,
+                           profiles: Sequence[str] = DEFAULT_MATRIX_PROFILES,
+                           *, seed: int = 0, max_evals: int = 20,
+                           journal_dir: Optional[str] = None) -> Dict:
+    """``compare_methods`` once per hardware profile, shared journal dir.
+
+    Profiles run in order; every sweep journals into the same directory, so
+    by the time device k runs, ``strategy="transfer"`` finds devices
+    0..k-1's journals and warm-starts from them (on the first device it is
+    a cold Bayesian search — its baseline). The result is the per-(device,
+    method) matrix of Phi / evaluations-to-optimum the paper's portability
+    claim needs.
+    """
+    wls = [wl.canonical() for wl in workloads]
+    matrix: Dict[str, Dict] = {}
+    for name in profiles:
+        prof = get_profile(name)
+        matrix[name] = compare_methods(
+            wls, methods, seed=seed, max_evals=max_evals,
+            journal_dir=journal_dir, profile=prof)
+    return {"profiles": list(profiles), "methods": list(methods),
+            "reports": matrix}
+
+
+def check_matrix(matrix_report: Dict) -> List[str]:
+    """Failure strings over every (device, method) cell; empty when sane.
+
+    Phi > 1 in ANY cell means a methodology "beat" that device's exhaustive
+    sweep — a correctness bug somewhere in the profile-threaded stack.
+    """
+    failures: List[str] = []
+    for prof, report in matrix_report.get("reports", {}).items():
+        for msg in check_report(report):
+            failures.append(f"[{prof}] {msg}")
+    return failures
+
+
+def format_matrix(matrix_report: Dict) -> str:
+    """Per-(device, method) table: Phi, mean slowdown, evals-to-optimum."""
+    lines = []
+    header = f"{'device':<14} {'method':<11} {'Phi':>6} {'mean_slow':>9} " \
+             f"{'evals_to_opt':>12} {'opt_rate':>8}"
+    lines.append(header)
+    lines.append("-" * len(header))
+    for prof in matrix_report["profiles"]:
+        overall = matrix_report["reports"][prof]["overall"]
+        for name in matrix_report["methods"]:
+            agg = overall[name]
+            eto = agg.get("mean_evals_to_optimum")
+            eto_s = f"{eto:12.1f}" if eto is not None else f"{'-':>12}"
+            lines.append(f"{prof:<14} {name:<11} {agg['phi']:6.3f} "
+                         f"{agg['mean_slowdown']:9.3f} {eto_s} "
+                         f"{agg['optimum_rate']:8.2f}")
+    return "\n".join(lines)
 
 
 def format_report(report: Dict) -> str:

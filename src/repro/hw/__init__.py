@@ -1,0 +1,18 @@
+"""Hardware layer: parametric machine models (see repro.hw.profiles)."""
+from repro.hw.profiles import (  # noqa: F401
+    CPU_INTERPRET,
+    GPU_SM,
+    TPU_V5E,
+    HardwareProfile,
+    active_profile,
+    get_profile,
+    profile_distance,
+    profiles,
+    register_profile,
+)
+
+__all__ = [
+    "HardwareProfile", "TPU_V5E", "GPU_SM", "CPU_INTERPRET",
+    "register_profile", "get_profile", "profiles", "active_profile",
+    "profile_distance",
+]

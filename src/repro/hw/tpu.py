@@ -1,161 +1,38 @@
-"""TPU v5e machine model.
+"""Deprecated compatibility shim over :mod:`repro.hw.profiles`.
 
-These constants drive (a) the analytical model-driven tuner's validity and
-occupancy reasoning (core/analytical.py), (b) the TPU cost-model objective
-(core/objective.py), and (c) the roofline accounting (launch/roofline.py).
-
-The paper targets a Jetson TX1 (GM20B Maxwell); this module is the TPU v5e
-replacement for its table of architectural limits (warps/SM, smem/block, ...).
+The machine model became data in the hardware-profile subsystem:
+``TpuSpec`` is an alias of :class:`repro.hw.profiles.HardwareProfile`
+(a strict superset of the old field set, same v5e defaults), and the
+model functions live in ``repro.hw.profiles`` with the numpy/math
+imports hoisted to module level.  ``V5E`` still resolves — with a
+``DeprecationWarning`` — to the registered ``tpu_v5e`` profile, so old
+imports keep working while call sites migrate.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
+
+from repro.hw.profiles import (  # noqa: F401  (re-exports)
+    TPU_V5E,
+    HardwareProfile as TpuSpec,
+    dma_efficiency,
+    dma_efficiency_arr,
+    dtype_bytes,
+    effective_element_bytes,
+    ilp_factor,
+    ilp_factor_arr,
+    lane_utilization,
+    lane_utilization_arr,
+    sublane_utilization,
+    sublane_utilization_arr,
+)
 
 
-@dataclasses.dataclass(frozen=True)
-class TpuSpec:
-    name: str = "tpu_v5e"
-    # --- per-chip peak rates (assignment-specified constants) ---
-    peak_bf16_flops: float = 197e12       # FLOP/s per chip, bf16 MXU
-    peak_f32_flops: float = 98.5e12       # MXU f32 ~ half of bf16
-    peak_vpu_flops: float = 3.2e12        # vector unit, elementwise f32
-    hbm_bandwidth: float = 819e9          # B/s per chip
-    ici_link_bandwidth: float = 50e9      # B/s per ICI link (assignment value)
-    # --- memory hierarchy ---
-    hbm_bytes: int = 16 * 2**30           # 16 GiB HBM per chip
-    vmem_bytes: int = 128 * 2**20         # VMEM per core (v5e: 128 MiB shared
-    #                                       scratch pool; we budget conservatively)
-    vmem_budget: int = 64 * 2**20         # usable budget for kernel working sets
-    # --- tiling geometry ---
-    lane_count: int = 128                 # trailing VREG dim
-    sublane_count: int = 8                # second-to-last VREG dim (f32)
-    mxu_dim: int = 128                    # systolic array edge
-    # --- pipeline model ---
-    dma_latency_s: float = 2e-6           # per-block DMA issue latency
-    kernel_launch_s: float = 5e-6         # fixed pallas_call overhead
-    pass_sync_s: float = 1.5e-6           # per-pass barrier/scratch-flush cost
-    # --- mesh geometry ---
-    chips_per_pod: int = 256
-
-
-V5E = TpuSpec()
-
-
-def dtype_bytes(dtype) -> int:
-    import numpy as np
-
-    return np.dtype(dtype).itemsize
-
-
-def effective_element_bytes(op: str, dtype) -> int:
-    """Bytes one logical element of ``op`` moves through memory.
-
-    Per-family multipliers over the raw dtype width: a tridiagonal element
-    is an equation of 4 coefficients, an FFT element is an interleaved
-    complex pair. The single source of truth for the analytical model, the
-    cost objective, and the ML featurizer — which must agree, since the
-    learned labels come from the cost model.
-    """
-    eb = dtype_bytes(dtype)
-    if op == "tridiag":
-        return 4 * eb
-    if op in ("fft", "large_fft"):
-        return 2 * eb
-    return eb
-
-
-def lane_utilization(trailing_dim: int, spec: TpuSpec = V5E) -> float:
-    """Fraction of the 128-wide lane dim that does useful work.
-
-    The analogue of warp occupancy in the paper's guideline: a trailing dim of
-    96 wastes 25% of every VPU issue; a trailing dim of 384 is three full
-    tiles -> 1.0.
-    """
-    lanes = spec.lane_count
-    if trailing_dim <= 0:
-        return 0.0
-    if trailing_dim >= lanes:
-        full, rem = divmod(trailing_dim, lanes)
-        used = full * lanes + rem
-        tiles = full + (1 if rem else 0)
-        return used / (tiles * lanes)
-    return trailing_dim / lanes
-
-
-def sublane_utilization(second_dim: int, spec: TpuSpec = V5E) -> float:
-    sub = spec.sublane_count
-    if second_dim <= 0:
-        return 0.0
-    if second_dim >= sub:
-        full, rem = divmod(second_dim, sub)
-        tiles = full + (1 if rem else 0)
-        return second_dim / (tiles * sub)
-    return second_dim / sub
-
-
-def dma_efficiency(block_bytes: int, spec: TpuSpec = V5E) -> float:
-    """HBM bandwidth ramp: small DMAs underutilize the memory system.
-
-    Saturates around 512 KiB transfers; modeled as b/(b+b_half) with
-    b_half = 64 KiB (fit shape typical of TPU DMA engines).
-    """
-    b_half = 64 * 2**10
-    return block_bytes / (block_bytes + b_half)
-
-
-def ilp_factor(unroll: int) -> float:
-    """Issue-pipeline utilization vs in-kernel ILP (the paper's premise iii).
-
-    One node-op per step leaves VPU issue bubbles; saturates by ~8-way.
-    """
-    import math
-
-    return min(1.0, 0.55 + 0.15 * math.log2(max(unroll, 1)))
-
-
-# ---------------------------------------------------------------------------
-# Vectorized counterparts (numpy arrays in, arrays out)
-# ---------------------------------------------------------------------------
-# The sweep engine evaluates whole candidate sets in a handful of array ops;
-# these mirror the scalar functions above element-for-element so batched and
-# per-config evaluation agree to floating-point identity.
-
-def lane_utilization_arr(trailing_dim, spec: TpuSpec = V5E):
-    import numpy as np
-
-    t = np.asarray(trailing_dim, dtype=np.float64)
-    lanes = float(spec.lane_count)
-    full = np.floor(t / lanes)
-    rem = t - full * lanes
-    tiles = full + (rem > 0)
-    multi = t / np.maximum(tiles * lanes, 1.0)
-    out = np.where(t >= lanes, multi, t / lanes)
-    return np.where(t <= 0, 0.0, out)
-
-
-def sublane_utilization_arr(second_dim, spec: TpuSpec = V5E):
-    import numpy as np
-
-    s = np.asarray(second_dim, dtype=np.float64)
-    sub = float(spec.sublane_count)
-    full = np.floor(s / sub)
-    rem = s - full * sub
-    tiles = full + (rem > 0)
-    multi = s / np.maximum(tiles * sub, 1.0)
-    out = np.where(s >= sub, multi, s / sub)
-    return np.where(s <= 0, 0.0, out)
-
-
-def dma_efficiency_arr(block_bytes, spec: TpuSpec = V5E):
-    import numpy as np
-
-    b = np.trunc(np.asarray(block_bytes, dtype=np.float64))
-    b_half = 64 * 2**10
-    return b / (b + b_half)
-
-
-def ilp_factor_arr(unroll):
-    import numpy as np
-
-    u = np.maximum(np.asarray(unroll, dtype=np.float64), 1.0)
-    return np.minimum(1.0, 0.55 + 0.15 * np.log2(u))
+def __getattr__(name: str):
+    if name == "V5E":
+        warnings.warn(
+            "repro.hw.tpu.V5E is deprecated; use the 'tpu_v5e' profile from "
+            "repro.hw.profiles (TPU_V5E / get_profile('tpu_v5e'))",
+            DeprecationWarning, stacklevel=2)
+        return TPU_V5E
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

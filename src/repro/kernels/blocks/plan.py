@@ -26,8 +26,9 @@ import math
 from typing import Dict, Mapping, Optional, Tuple
 
 from repro.core.space import Workload, fit_block
-from repro.hw.tpu import (V5E, TpuSpec, dtype_bytes, effective_element_bytes,
-                          lane_utilization, sublane_utilization)
+from repro.hw.profiles import (HardwareProfile, active_profile, dtype_bytes,
+                               effective_element_bytes, lane_utilization,
+                               sublane_utilization)
 
 # Column tiles a fused carry chain tolerates before the multi-pass driver
 # (three launches, parallel across chunks) wins over serializing the grid's
@@ -102,9 +103,11 @@ def is_ragged(stages: Tuple[int, ...], nominal: int, span: int) -> bool:
     return bool(stages) and stages[-1] != min(nominal, span)
 
 
-def resident_tile_cap(wl: Workload, spec: TpuSpec = V5E) -> int:
+def resident_tile_cap(wl: Workload,
+                      spec: Optional[HardwareProfile] = None) -> int:
     """Largest power-of-two tile whose double-buffered footprint fits VMEM
     with at least one problem row per program (paper §IV-C boundary)."""
+    spec = spec if spec is not None else active_profile()
     eb = dtype_bytes(wl.dtype) * (2 if wl.op in ("fft", "large_fft") else 1)
     tile = 256
     while tile * 2 * eb * 2 <= spec.vmem_budget and tile * 2 <= wl.n:
@@ -216,7 +219,7 @@ class StagePlan:
 # Per-family builders
 # ---------------------------------------------------------------------------
 
-def _occ(tile_n: int, rows: int, spec: TpuSpec) -> Tuple[int, float, float, float]:
+def _occ(tile_n: int, rows: int, spec: HardwareProfile) -> Tuple[int, float, float, float]:
     trailing = min(tile_n, spec.lane_count * spec.sublane_count)
     lane = lane_utilization(trailing, spec)
     sub = sublane_utilization(rows, spec)
@@ -227,7 +230,7 @@ def _is_linrec(wl: Workload) -> bool:
     return wl.op in ("rglru",) or wl.variant in _LINREC_VARIANTS
 
 
-def _prefix_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec,
+def _prefix_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile,
                  seq_limit: int) -> StagePlan:
     eb = effective_element_bytes(wl.op, wl.dtype)
     ib = dtype_bytes(wl.dtype)
@@ -287,7 +290,7 @@ def _prefix_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec,
         steps_per_pass=float(len(stages)))
 
 
-def _ssd_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec,
+def _ssd_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile,
               seq_limit: int) -> StagePlan:
     """Three-phase SSD: intra-chunk kernel, phase-B linrec over chunk
     transitions (a child prefix plan on the shared blocks), apply kernel.
@@ -320,7 +323,7 @@ def _ssd_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec,
         passes=len(launches), children=(child,))
 
 
-def _tridiag_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
+def _tridiag_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile
                   ) -> StagePlan:
     eb = effective_element_bytes(wl.op, wl.dtype)        # 4 coefficients
     ib = dtype_bytes(wl.dtype)
@@ -364,7 +367,7 @@ def _tridiag_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
         ragged=ragged, steps_per_pass=float(max(len(stages), 1)))
 
 
-def _fft_fused_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
+def _fft_fused_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile
                     ) -> StagePlan:
     eb = effective_element_bytes("fft", wl.dtype)        # interleaved re/im
     batch = max(wl.batch, 1)
@@ -388,7 +391,7 @@ def _fft_fused_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
         steps_per_pass=float(len(stages)))
 
 
-def _large_fft_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec,
+def _large_fft_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile,
                     seq_limit: int, max_tile: Optional[int]) -> StagePlan:
     """Four-step decomposition N = n1*n2 (paper §IV-C), recursive.
 
@@ -424,7 +427,7 @@ def _large_fft_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec,
         steps_per_pass=row.steps_per_pass, children=(col, row))
 
 
-def _attention_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
+def _attention_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile
                     ) -> StagePlan:
     batch = max(wl.batch, 1)
     eb = effective_element_bytes(wl.op, wl.dtype)
@@ -445,7 +448,7 @@ def _attention_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
         steps_per_pass=float(steps))
 
 
-def _matmul_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
+def _matmul_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile
                  ) -> StagePlan:
     batch = max(wl.batch, 1)
     eb = effective_element_bytes(wl.op, wl.dtype)
@@ -470,11 +473,12 @@ def _matmul_plan(wl: Workload, cfg: Mapping[str, int], spec: TpuSpec
 # Entry points
 # ---------------------------------------------------------------------------
 
-def build_plan(wl: Workload, cfg: Mapping[str, int], *, spec: TpuSpec = V5E,
+def build_plan(wl: Workload, cfg: Mapping[str, int], *, spec: Optional[HardwareProfile] = None,
                seq_limit: int = DEFAULT_SEQ_LIMIT,
                max_tile: Optional[int] = None) -> StagePlan:
     """The staged execution of ``cfg`` on ``wl`` (uncached; see plan_for)."""
     wl = wl.canonical()
+    spec = spec if spec is not None else active_profile()
     if wl.op in ("scan", "ssd", "rglru"):
         if wl.op == "ssd":
             return _ssd_plan(wl, cfg, spec, seq_limit)
@@ -496,18 +500,19 @@ def build_plan(wl: Workload, cfg: Mapping[str, int], *, spec: TpuSpec = V5E,
 
 @functools.lru_cache(maxsize=65536)
 def _plan_cached(op: str, variant: str, n: int, batch: int, dtype: str,
-                 cfg_items: Tuple[Tuple[str, int], ...], spec: TpuSpec,
+                 cfg_items: Tuple[Tuple[str, int], ...], spec: HardwareProfile,
                  seq_limit: int, max_tile: Optional[int]) -> StagePlan:
     wl = Workload(op=op, n=n, batch=batch, dtype=dtype, variant=variant)
     return build_plan(wl, dict(cfg_items), spec=spec, seq_limit=seq_limit,
                       max_tile=max_tile)
 
 
-def plan_for(wl: Workload, cfg: Mapping[str, int], *, spec: TpuSpec = V5E,
+def plan_for(wl: Workload, cfg: Mapping[str, int], *, spec: Optional[HardwareProfile] = None,
              seq_limit: int = DEFAULT_SEQ_LIMIT,
              max_tile: Optional[int] = None) -> StagePlan:
     """Memoized ``build_plan`` — the resolve/dispatch hot path and the
     featurizer hit the same plan thousands of times per space."""
     wl = wl.canonical()
+    spec = spec if spec is not None else active_profile()
     return _plan_cached(wl.op, wl.variant, wl.n, wl.batch, wl.dtype,
                         tuple(sorted(cfg.items())), spec, seq_limit, max_tile)

@@ -28,7 +28,7 @@ import re
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.configs.base import SHAPES, all_archs, get_arch, shape_applicable
-from repro.hw.tpu import V5E
+from repro.hw.profiles import TPU_V5E as V5E
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,

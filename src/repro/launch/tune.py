@@ -28,7 +28,11 @@ Methodology comparison (the paper's Table II as a CI artifact):
 
 runs analytical/ml/online/bayesian/random against the exhaustive optimum
 on the holdout suite and exits non-zero if exhaustive is ever beaten
-(Phi > 1 is a sweep/objective bug, not a better methodology).
+(Phi > 1 is a sweep/objective bug, not a better methodology).  With
+``--device-matrix`` the comparison runs once per hardware profile
+(default tpu_v5e,gpu_sm,cpu_interpret — see docs/hardware.md) sharing one
+journal directory, so ``strategy="transfer"`` on later devices warm-starts
+from earlier devices' sweeps; Phi > 1 in ANY (device, method) cell fails.
 
 Online tuning replay (the deployment mode's deterministic test bench):
 
@@ -237,11 +241,24 @@ def compare_methods_main(argv: List[str]) -> int:
     ap.add_argument("--journal-dir", default=None,
                     help="checkpoint/resume the exhaustive sweeps here")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--device-matrix", action="store_true",
+                    help="run the comparison once per hardware profile and "
+                         "gate every (device, method) cell on Phi <= 1; "
+                         "overrides --methods with the matrix defaults "
+                         "unless --methods is given explicitly")
+    ap.add_argument("--profiles", default=None,
+                    help="comma list of hardware profiles for --device-matrix "
+                         "(default: tpu_v5e,gpu_sm,cpu_interpret; order "
+                         "matters — earlier devices' journals seed "
+                         "strategy='transfer' on later ones)")
     args = ap.parse_args(argv)
 
     import os
+    import tempfile
 
-    from repro.evaluation import check_report, compare_methods, format_report
+    from repro.evaluation import (check_matrix, check_report, compare_methods,
+                                  compare_methods_matrix, format_matrix,
+                                  format_report)
     from repro.tuning.ml import suite_workloads
 
     if args.model:
@@ -250,6 +267,37 @@ def compare_methods_main(argv: List[str]) -> int:
         workloads = suite_workloads(args.split, ops=_parse_ops(args.ops))
     except ValueError as e:
         ap.error(str(e))
+
+    if args.device_matrix:
+        from repro.evaluation.compare import (DEFAULT_MATRIX_METHODS,
+                                              DEFAULT_MATRIX_PROFILES)
+        explicit_methods = any(a == "--methods" or a.startswith("--methods=")
+                               for a in argv)
+        methods = tuple(m for m in args.methods.split(",") if m) \
+            if explicit_methods else DEFAULT_MATRIX_METHODS
+        profiles = tuple(p for p in args.profiles.split(",") if p) \
+            if args.profiles else DEFAULT_MATRIX_PROFILES
+        # transfer needs cross-device journals: default to a scratch dir so
+        # a bare invocation still exercises the warm-start path
+        journal_dir = args.journal_dir or tempfile.mkdtemp(
+            prefix="repro_matrix_journals_")
+        print(f"[compare-methods] device matrix: {len(workloads)} "
+              f"{args.split} workloads x {len(methods)} methodologies x "
+              f"{len(profiles)} profiles ...", flush=True)
+        matrix = compare_methods_matrix(
+            workloads, methods, profiles, seed=args.seed,
+            max_evals=args.max_evals, journal_dir=journal_dir)
+        matrix["suite"] = {"split": args.split, "seed": args.seed,
+                           "noise": args.noise, "max_evals": args.max_evals}
+        print(format_matrix(matrix))
+        with open(args.json, "w") as f:
+            json.dump(matrix, f, indent=1, sort_keys=True)
+        print(f"[compare-methods] matrix report written to {args.json}")
+        failures = check_matrix(matrix)
+        for failure in failures:
+            print(f"[compare-methods] FAIL: {failure}", file=sys.stderr)
+        return 1 if failures else 0
+
     methods = tuple(m for m in args.methods.split(",") if m)
     print(f"[compare-methods] {len(workloads)} {args.split} workloads x "
           f"{len(methods)} methodologies ...", flush=True)

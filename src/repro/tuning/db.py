@@ -1,18 +1,30 @@
 """Versioned, thread-safe JSON config store (the offline -> online handoff).
 
-Schema 2 wraps the entries in an envelope so future migrations are cheap:
+Schema 3 wraps the entries in an envelope and stamps every entry with the
+hardware profile it was tuned for:
 
-    {"schema": 2,
+    {"schema": 3,
      "entries": {"<platform>|<workload-key>": {"config": {...},
                                                "time_s": ..., "method": ...,
-                                               "evaluations": ...}}}
+                                               "evaluations": ...,
+                                               "profile": "<profile-name>"}}}
 
-Legacy (schema-1) files were a flat ``{key: entry}`` mapping; ``_load``
-migrates them transparently and the next ``store`` persists the new
-envelope. Unknown top-level envelope keys (annotations from other tools,
-future-schema side-channels) are preserved across load/flush rather than
-dropped. Writes are atomic (tmp file + ``os.replace``) and serialized by a
-lock, so concurrent ``store`` calls from threads never corrupt the file.
+The platform prefix in the key namespaces devices; the per-entry
+``profile`` field makes the device explicit and lets ``lookup`` refuse an
+entry whose profile disagrees with the session's (a config tuned for one
+device must never silently resolve under another — see docs/hardware.md).
+
+Legacy files migrate transparently: schema-1 files were a flat
+``{key: entry}`` mapping; schema-2 entries lack the ``profile`` field and
+are defaulted to their key's platform prefix. A key with no platform
+prefix at all is re-keyed under ``tpu_v5e`` — every pre-profile entry was
+tuned on the v5e model, and without the rewrite such entries could never
+resolve (``lookup`` always prefixes the session platform). The next
+``store`` persists the new envelope. Unknown top-level envelope keys
+(annotations from other tools, future-schema side-channels) are preserved
+across load/flush rather than dropped. Writes are atomic (tmp file +
+``os.replace``) and serialized by a lock, so concurrent ``store`` calls
+from threads never corrupt the file.
 """
 from __future__ import annotations
 
@@ -21,11 +33,30 @@ import os
 import threading
 from typing import Dict, Optional
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+# every entry written before the profile field existed was tuned against
+# the v5e machine model
+LEGACY_PROFILE = "tpu_v5e"
 
 DEFAULT_DB_PATH = os.environ.get(
     "REPRO_TUNING_DB", os.path.join(os.path.dirname(__file__), "..", "..", "..",
                                     "artifacts", "tuning_db.json"))
+
+
+def _migrate_entry(key: str, entry: Dict) -> Dict:
+    """Schema <=2 -> 3: stamp the profile the entry was tuned under."""
+    if not isinstance(entry, dict) or "profile" in entry:
+        return entry
+    out = dict(entry)
+    out["profile"] = key.split("|", 1)[0] if "|" in key else LEGACY_PROFILE
+    return out
+
+
+def _migrate_key(key: str) -> str:
+    """Bare pre-platform keys re-key under the legacy device so ``lookup``
+    (which always prefixes the session platform) can actually find them."""
+    return key if "|" in key else f"{LEGACY_PROFILE}|{key}"
 
 
 class TuningDB:
@@ -51,7 +82,15 @@ class TuningDB:
             except (json.JSONDecodeError, OSError):
                 raw = {}
             if isinstance(raw, dict) and "schema" in raw:
-                self._data = dict(raw.get("entries") or {})
+                entries = dict(raw.get("entries") or {})
+                try:
+                    schema = int(raw.get("schema") or 0)
+                except (TypeError, ValueError):
+                    schema = 0
+                if schema < SCHEMA_VERSION:
+                    entries = {_migrate_key(k): _migrate_entry(k, v)
+                               for k, v in entries.items()}
+                self._data = entries
                 # preserve unknown envelope keys (annotations written by
                 # other tools, future-schema side-channels): they round-trip
                 # through the next flush instead of being dropped
@@ -59,7 +98,9 @@ class TuningDB:
                                if k not in ("schema", "entries")}
             else:
                 # legacy flat {key: entry} file (schema 1)
-                self._data = raw if isinstance(raw, dict) else {}
+                raw = raw if isinstance(raw, dict) else {}
+                self._data = {_migrate_key(k): _migrate_entry(k, v)
+                              for k, v in raw.items()}
         self._loaded = True
 
     def _flush_locked(self) -> None:
@@ -82,7 +123,14 @@ class TuningDB:
         with self._lock:
             self._load()
             entry = self._data.get(self._key(wl))
-            return dict(entry["config"]) if entry else None
+            if not entry:
+                return None
+            # defense in depth on top of the key prefix: an entry stamped
+            # for another device never resolves here (e.g. a file edited by
+            # hand, or a legacy entry migrated under a foreign prefix)
+            if entry.get("profile", self.platform) != self.platform:
+                return None
+            return dict(entry["config"])
 
     def store(self, wl, cfg: Dict, time_s: float, method: str,
               evaluations: int = 0) -> None:
@@ -90,7 +138,7 @@ class TuningDB:
             self._load()
             self._data[self._key(wl)] = {
                 "config": dict(cfg), "time_s": time_s, "method": method,
-                "evaluations": evaluations,
+                "evaluations": evaluations, "profile": self.platform,
             }
             self._flush_locked()
 

@@ -26,12 +26,14 @@ import numpy as np
 
 from repro.core.analytical import score
 from repro.core.space import Config, SearchSpace
-from repro.hw.tpu import dma_efficiency, dtype_bytes, ilp_factor
+from repro.hw.profiles import dma_efficiency, dtype_bytes, ilp_factor
 from repro.kernels.blocks.plan import plan_for
 
 # Bump whenever FEATURE_NAMES or any encoding rule changes; artifacts carry
 # the version and loading a stale one fails fast instead of mis-predicting.
-FEATURE_VERSION = 3
+# v4: device feature columns (hardware-profile geometry/limits), so one
+# forest can pool rows measured on different profiles.
+FEATURE_VERSION = 4
 
 FEATURE_NAMES = (
     # workload (Input Parameters `A`)
@@ -64,6 +66,13 @@ FEATURE_NAMES = (
     # transfers exactly.
     "ana_rank_pct", "tier_rel", "radix_rank_rel", "block_rank_rel",
     "dma_eff_rel",
+    # device columns (the space's hardware profile): constant within one
+    # profile — a single-device forest never splits on them — but they let
+    # one forest pool rows measured on different devices and learn
+    # hardware-conditioned corrections (the paper's portability story).
+    "dev_log2_vmem_budget", "dev_log2_lanes", "dev_log2_sublanes",
+    "dev_log2_mxu", "dev_log2_bw", "dev_log2_flops_bytes",
+    "dev_log2_launch_ns", "dev_log2_sync_ns",
 )
 
 N_FEATURES = len(FEATURE_NAMES)
@@ -129,7 +138,7 @@ def _encode(space: SearchSpace, cfg: Mapping[str, int]):
         "block_rank": float(sc.block_rank),
         "ilp_rank": float(sc.ilp_rank),
         "dma_eff": float(dma_eff),
-        "ilp_eff": float(ilp_factor(int(cfg.get("unroll", 1)))),
+        "ilp_eff": float(ilp_factor(int(cfg.get("unroll", 1)), spec)),
         "lane_util": float(res["lane_eff"]),
         "sublane_util": float(res["sublane_eff"]),
         "log2_total_bytes": _log2(total_bytes),
@@ -151,6 +160,18 @@ def _encode(space: SearchSpace, cfg: Mapping[str, int]):
     row["radix_rank_rel"] = 0.0
     row["block_rank_rel"] = 0.0
     row["dma_eff_rel"] = 0.0
+    # device columns: the profile this space (and therefore this row's
+    # label) was bounded/measured by
+    row["dev_log2_vmem_budget"] = _log2(spec.vmem_budget)
+    row["dev_log2_lanes"] = _log2(spec.lane_count)
+    row["dev_log2_sublanes"] = _log2(spec.sublane_count)
+    row["dev_log2_mxu"] = _log2(spec.mxu_dim)
+    row["dev_log2_bw"] = _log2(spec.hbm_bandwidth)
+    # machine balance (vector flops per HBM byte): the roofline knee
+    row["dev_log2_flops_bytes"] = _log2(spec.peak_vpu_flops
+                                        / spec.hbm_bandwidth)
+    row["dev_log2_launch_ns"] = _log2(spec.kernel_launch_s * 1e9)
+    row["dev_log2_sync_ns"] = _log2(spec.pass_sync_s * 1e9)
     return (np.array([row[name] for name in FEATURE_NAMES],
                      dtype=np.float64), sc)
 

@@ -33,9 +33,9 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 from repro.core.analytical import AnalyticalTuner
 from repro.core.bayesian import BayesianTuner, TuneResult
 from repro.core.exhaustive import ExhaustiveSearch, RandomSearch
-from repro.core.objective import CachedObjective, Objective, TPUCostModelObjective
+from repro.core.objective import CachedObjective, CostModelObjective, Objective
 from repro.core.space import Config, Workload, build_space
-from repro.hw.tpu import V5E, TpuSpec
+from repro.hw.profiles import HardwareProfile, active_profile, get_profile
 from repro.tuning.db import TuningDB
 from repro.tuning.overrides import active_overrides
 from repro.tuning.registry import normalizer_for
@@ -96,6 +96,16 @@ def _ml(space, objective, *, seed: int = 0, max_evals: int = 0,
                                    max_evals=max_evals)
 
 
+def _transfer(space, objective, *, seed: int = 0, max_evals: int = 64,
+              journal_dir=None, **_sweep) -> TuneResult:
+    # lazy import (the transfer stack pulls in the journal reader). Warm
+    # start from OTHER devices' sweep journals in journal_dir, reweighted by
+    # profile distance; falls back to cold Bayesian with no journals.
+    from repro.core.transfer import transfer_strategy
+    return transfer_strategy(space, objective, seed=seed,
+                             max_evals=max_evals, journal_dir=journal_dir)
+
+
 _STRATEGIES: Dict[str, Strategy] = {
     "bayesian": _bayesian,
     "exhaustive": _exhaustive,
@@ -103,6 +113,7 @@ _STRATEGIES: Dict[str, Strategy] = {
     "analytical": _analytical,
     "ml": _ml,
     "online": _online,
+    "transfer": _transfer,
 }
 
 
@@ -134,13 +145,27 @@ class TunerSession:
     """Owns the DB + caches; the one public way to resolve tuned configs."""
 
     def __init__(self, db: Optional[TuningDB] = None, *,
-                 db_path: Optional[str] = None, platform: str = "tpu_v5e",
-                 spec: TpuSpec = V5E, cache_size: int = 2048,
-                 sweep_dir: Optional[str] = None):
+                 db_path: Optional[str] = None, platform: Optional[str] = None,
+                 spec: Optional[HardwareProfile] = None,
+                 cache_size: int = 2048, sweep_dir: Optional[str] = None):
+        # profile resolution: an explicit spec wins; else a platform naming a
+        # registered profile; else the process-wide active profile. The DB
+        # platform defaults to the profile name, so entries tuned for one
+        # device are keyed apart from every other device's.
+        if spec is None:
+            try:
+                spec = get_profile(platform) if platform is not None \
+                    else active_profile()
+            except ValueError:
+                # a platform label that is not a registered profile (custom
+                # DB namespaces) keys the DB but models as the active device
+                spec = active_profile()
+        self.spec = spec
+        if platform is None:
+            platform = spec.name
         self.db = db if db is not None else TuningDB(path=db_path,
                                                      platform=platform)
         self.platform = self.db.platform
-        self.spec = spec
         self.sweep_dir = sweep_dir   # journal directory for exhaustive sweeps
         self.cache_size = max(int(cache_size), 1)
         self._analytical = AnalyticalTuner()
@@ -193,7 +218,7 @@ class TunerSession:
             cached = self._suggested.get(wl.key)
         if cached is not None:
             return dict(cached)
-        cfg = self._analytical.suggest(build_space(wl))
+        cfg = self._analytical.suggest(build_space(wl, spec=self.spec))
         with self._lock:
             self._suggested.setdefault(wl.key, dict(cfg))
         return cfg
@@ -216,8 +241,8 @@ class TunerSession:
         """
         wl = wl.canonical()
         strategy = get_strategy(method)
-        space = build_space(wl)
-        cached = CachedObjective(objective or TPUCostModelObjective())
+        space = build_space(wl, spec=self.spec)
+        cached = CachedObjective(objective or CostModelObjective(self.spec))
         extra = {"journal_dir": self.sweep_dir, "prune": prune,
                  "top_k": top_k}
         try:     # strategies registered before the sweep kwargs existed

@@ -34,7 +34,11 @@ from repro.core.bayesian import TuneResult
 from repro.core.objective import Objective
 from repro.core.space import Config, SearchSpace, Workload
 
-JOURNAL_VERSION = 1
+# v2 adds the hardware-profile name to the header; v1 journals (pre-profile,
+# all measured on the tpu_v5e model) stay readable — the objective-signature
+# check already rejects cross-profile resumption, since the profile name is
+# embedded in every cost-model signature.
+JOURNAL_VERSION = 2
 
 # default kept-set size for prune="analytical"; expensive objectives can
 # pass an explicit top_k
@@ -172,6 +176,12 @@ class SweepJournal:
             raise ValueError(
                 f"sweep journal was measured with objective "
                 f"{rec.get('objective')!r}, not {objective.signature()!r}")
+        if objective is not None and rec.get("profile") is not None:
+            want = getattr(getattr(objective, "spec", None), "name", None)
+            if want is not None and rec["profile"] != want:
+                raise ValueError(
+                    f"sweep journal was measured on profile "
+                    f"{rec.get('profile')!r}, not {want!r}")
 
     # -- writing ------------------------------------------------------------
 
@@ -199,6 +209,10 @@ class SweepJournal:
                                "batch": wl.batch, "dtype": wl.dtype,
                                "variant": wl.variant},
                   "objective": objective.signature(),
+                  # device the times were measured on (None for objectives
+                  # that carry no hardware model, e.g. wallclock runners)
+                  "profile": getattr(getattr(objective, "spec", None),
+                                     "name", None),
                   "space_size": space_size,
                   "pruned": int(pruned)}
         self._append_lines([json.dumps(header, sort_keys=True)])

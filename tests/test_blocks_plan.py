@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core.space import Workload, build_space
-from repro.hw.tpu import V5E
+from repro.hw.profiles import TPU_V5E as V5E
 from repro.kernels.blocks import driver
 from repro.kernels.blocks.plan import (DEFAULT_SEQ_LIMIT, build_plan,
                                        plan_for, stage_radices,

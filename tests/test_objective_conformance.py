@@ -54,6 +54,19 @@ def _tpu_cost_model():
     return TPUCostModelObjective(noise=0.02), space, _sample_configs(space)
 
 
+def _gpu_cost_model():
+    """The profile-parameterized cost model on a non-default device: the
+    batch fast path must stay bit-identical to the scalar loop under
+    every registered profile's constants, not just tpu_v5e's."""
+    from repro.core.objective import CostModelObjective
+    from repro.hw.profiles import GPU_SM
+
+    space = build_space(Workload(op="scan", n=512, batch=2**17,
+                                 variant="lf"), spec=GPU_SM)
+    return CostModelObjective(GPU_SM, noise=0.02), space, \
+        _sample_configs(space)
+
+
 def _cached():
     space = build_space(Workload(op="fft", n=256, batch=2**14,
                                  variant="stockham"))
@@ -124,7 +137,11 @@ def _compiled_roofline():
 
 
 FACTORIES = {
-    "TPUCostModelObjective": _tpu_cost_model,
+    # TPUCostModelObjective is an alias of CostModelObjective (the
+    # subclass name discovery sees); the second entry runs the same
+    # conformance on a non-default hardware profile
+    "CostModelObjective": _tpu_cost_model,
+    "CostModelObjective_gpu_sm": _gpu_cost_model,
     "CachedObjective": _cached,
     "WallClockObjective": _wallclock,
     "OnlineWallClockObjective": _online_wallclock,

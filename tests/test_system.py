@@ -25,9 +25,14 @@ def test_offline_online_flow(tmp_path):
     np.testing.assert_allclose(got, scan_add_ref(x), rtol=2e-5, atol=2e-4)
 
 
-def test_methodology_comparison_reproduces_paper_ordering():
+def test_methodology_comparison_reproduces_paper_ordering(monkeypatch):
     """Both predictive methodologies land near the exhaustive optimum
-    (paper Table II: Phi >= 0.87 everywhere, >= 0.97 for single-kernel)."""
+    (paper Table II: Phi >= 0.87 everywhere, >= 0.97 for single-kernel).
+
+    Pinned to tpu_v5e: the Phi floors are calibrated against that machine
+    model (other devices' floors live in the compare-methods device-matrix
+    gate), so the REPRO_HW_PROFILE matrix must not retarget this test."""
+    monkeypatch.setenv("REPRO_HW_PROFILE", "tpu_v5e")
     effs = {"analytical": [], "bayesian": []}
     for n in [128, 256, 512, 1024]:
         wl = Workload(op="scan", n=n, batch=2**22 // n, variant="lf")

@@ -1,10 +1,13 @@
-"""Transfer (multi-task) tuning: GPTune's cross-size amortization."""
+"""Transfer tuning: cross-size amortization + cross-device journal seeding."""
 import numpy as np
 
-from repro.core import (BayesianTuner, CachedObjective, ExhaustiveSearch,
-                        TPUCostModelObjective, Workload, build_space)
-from repro.core.transfer import TaskHistory, TransferBayesianTuner, \
-    tune_family
+from repro.core import (BayesianTuner, CachedObjective, CostModelObjective,
+                        ExhaustiveSearch, TPUCostModelObjective, Workload,
+                        build_space)
+from repro.core.transfer import (TaskHistory, TransferBayesianTuner,
+                                 device_histories, journal_history, op_family,
+                                 transfer_seed, transfer_strategy, tune_family)
+from repro.hw.profiles import GPU_SM, TPU_V5E
 
 
 def _obj():
@@ -35,3 +38,126 @@ def test_transfer_without_history_still_works():
     sp = build_space(wl)
     res = TransferBayesianTuner(seed=1).tune(sp, _obj(), histories=())
     assert sp.is_valid(res.best_config)
+
+
+# ---------------------------------------------------------------------------
+# Family guard (regression: cross-family history pollution)
+# ---------------------------------------------------------------------------
+
+def test_op_family_pools_scan_variants():
+    assert op_family("ssd") == "scan"
+    assert op_family("rglru") == "scan"
+    assert op_family("fft") == "fft"
+
+
+def test_foreign_family_history_is_ignored():
+    """An FFT history at the same N must not steer a scan search: the task
+    kernel only sees log2(N), so without the guard the foreign
+    observations enter the prior at full weight (the regression)."""
+    n = 512
+    scan_wl = Workload(op="scan", n=n, batch=2**17, variant="lf")
+    fft_wl = Workload(op="fft", n=n, batch=2**17, variant="stockham")
+    fft_sp = build_space(fft_wl)
+    fft_res = ExhaustiveSearch().tune(fft_sp, _obj())
+    foreign = TaskHistory(fft_wl, [c for c, _ in fft_res.history],
+                          [t for _, t in fft_res.history])
+
+    sp = build_space(scan_wl)
+    clean = TransferBayesianTuner(seed=3).tune(sp, _obj(), histories=())
+    polluted = TransferBayesianTuner(seed=3).tune(sp, _obj(), (foreign,))
+    # with the guard the foreign history is filtered out entirely, so the
+    # search is trajectory-identical to the history-free run
+    assert polluted.best_config == clean.best_config
+    assert [c for c, _ in polluted.history] == [c for c, _ in clean.history]
+
+
+def test_same_family_history_does_transfer():
+    """Control for the guard test: a scan history DOES change the search
+    bootstrap (otherwise the guard could pass by ignoring everything)."""
+    wl = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    src_wl = Workload(op="scan", n=256, batch=2**18, variant="lf")
+    src_sp = build_space(src_wl)
+    src = ExhaustiveSearch().tune(src_sp, _obj())
+    hist = TaskHistory(src_wl, [c for c, _ in src.history],
+                       [t for _, t in src.history])
+    sp = build_space(wl)
+    cold = TransferBayesianTuner(seed=3).tune(sp, _obj(), histories=())
+    warm = TransferBayesianTuner(seed=3).tune(sp, _obj(), (hist,))
+    assert [c for c, _ in warm.history] != [c for c, _ in cold.history]
+
+
+# ---------------------------------------------------------------------------
+# Cross-device seeding (journals from device A warm-start device B)
+# ---------------------------------------------------------------------------
+
+def _journal_tpu_sweep(journal_dir, wl):
+    ExhaustiveSearch(journal_dir=str(journal_dir)).tune(
+        build_space(wl, spec=TPU_V5E), CostModelObjective(TPU_V5E))
+
+
+def test_journal_history_reweights_by_profile_distance(tmp_path):
+    import os
+
+    wl = Workload(op="scan", n=256, batch=2**18, variant="lf")
+    _journal_tpu_sweep(tmp_path, wl)
+    path = os.path.join(str(tmp_path), os.listdir(str(tmp_path))[0])
+
+    got = journal_history(path, GPU_SM)
+    assert got is not None
+    hist, w = got
+    assert hist.workload.key == wl.key
+    assert 0.0 < w < 1.0
+    # times are flattened slowdowns: best == 1.0, spread shrunk by w
+    assert min(hist.times) == 1.0
+    assert all(t >= 1.0 for t in hist.times)
+
+    # a journal measured on the target itself has nothing to transfer
+    assert journal_history(path, TPU_V5E) is None
+
+
+def test_device_histories_scopes_to_workload(tmp_path):
+    wl = Workload(op="scan", n=256, batch=2**18, variant="lf")
+    other = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    _journal_tpu_sweep(tmp_path, wl)
+    _journal_tpu_sweep(tmp_path, other)
+
+    hists = device_histories(str(tmp_path), wl, GPU_SM)
+    assert len(hists) == 1 and hists[0].workload.key == wl.key
+    assert device_histories(str(tmp_path), wl, TPU_V5E) == []
+
+
+def test_transfer_strategy_warm_start_finds_optimum_faster(tmp_path):
+    wl = Workload(op="scan", n=256, batch=2**18, variant="lf")
+    _journal_tpu_sweep(tmp_path, wl)
+
+    sp = build_space(wl, spec=GPU_SM)
+    best = ExhaustiveSearch().tune(sp, CostModelObjective(GPU_SM)).best_time
+
+    warm = transfer_strategy(sp, CachedObjective(CostModelObjective(GPU_SM)),
+                             seed=0, journal_dir=str(tmp_path))
+    assert sp.is_valid(warm.best_config)
+    # the cross-device ranking transfers: the very first warm evaluations
+    # land on (near-)optimal configs
+    first = [t for _, t in warm.history[:2]]
+    assert min(first) <= best * 1.05
+
+
+def test_transfer_seed_populates_session_db(tmp_path):
+    from repro.tuning.session import TunerSession
+
+    wl = Workload(op="scan", n=256, batch=2**18, variant="lf")
+    _journal_tpu_sweep(tmp_path / "journals", wl)
+
+    session = TunerSession(db_path=str(tmp_path / "db.json"),
+                           platform="gpu_sm")
+    out = transfer_seed(session, [str(tmp_path / "journals")])
+    assert wl.key in out
+    stored = session.db.lookup(wl)
+    assert stored == dict(out[wl.key].best_config)
+    entry = session.db.entries()[f"gpu_sm|{wl.key}"]
+    assert entry["method"] == "transfer" and entry["profile"] == "gpu_sm"
+
+    # a tpu session sees nothing: the journals ARE tpu_v5e measurements
+    tpu = TunerSession(db_path=str(tmp_path / "db2.json"),
+                       platform="tpu_v5e")
+    assert transfer_seed(tpu, [str(tmp_path / "journals")]) == {}
