@@ -1,0 +1,124 @@
+"""Pareto-front / policy sweep: does multi-objective tuning change answers?
+
+For each benchmark workload the full space is swept once on the
+deterministic device model (full metric vectors: time / modeled joules /
+peak VMEM), then each policy (latency, energy, edp) picks its winner from
+the same measurements — exactly what ``TunerSession`` does under a
+policy.  Rows record per-policy winners, their real seconds and joules,
+and the Pareto-front size (the number of genuinely distinct trade-offs
+the space offers).
+
+The CI gate asserts the subsystem is not decorative: **at least one
+workload must flip winners between the latency and energy policies, with
+the energy winner spending strictly fewer modeled joules**.  Pure
+cost-model arithmetic — immune to runner noise.
+
+Standalone (the CI bench-smoke invocation):
+
+  PYTHONPATH=src:. python benchmarks/bench_pareto.py \
+      --json BENCH_pareto.json [--smoke]
+
+exits non-zero when the gate fails; ``run.py --only pareto`` emits the
+same rows as a section.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import CostModelObjective, Workload, build_space
+from repro.core.objective import METRIC_ENERGY, METRIC_TIME
+from repro.core.policy import get_policy, pareto_front, policy_scalar_cols
+from repro.hw.profiles import get_profile
+
+PROFILE = "tpu_v5e"
+POLICIES = ("latency", "energy", "edp")
+
+CASES = [("scan", "lf", 256, 4096), ("scan", "lf", 1024, 512),
+         ("fft", "stockham", 256, 4096), ("tridiag", "wm", 256, 4096)]
+SMOKE_CASES = [("scan", "lf", 1024, 512), ("fft", "stockham", 256, 4096)]
+
+
+def run(emit, seed: int = 0, smoke: bool = False) -> List[str]:
+    """Emit pareto rows; returns gate-failure strings (empty = pass)."""
+    prof = get_profile(PROFILE)
+    obj = CostModelObjective(prof)
+    cases = SMOKE_CASES if smoke else CASES
+
+    flips = 0
+    for op, variant, n, batch in cases:
+        wl = Workload(op=op, n=n, batch=batch, variant=variant)
+        space = build_space(wl, prof)
+        cands = space.enumerate_valid()
+        cols = obj.batch_eval_metrics(space, cands, assume_valid=True)
+
+        front = pareto_front(cols, cands, obj.metric_names())
+        emit(f"pareto,{op},{variant},{n},front,size,{len(front)},"
+             f"space={len(cands)}")
+
+        winners = {}
+        for name in POLICIES:
+            scal = policy_scalar_cols(get_policy(name, prof), cols)
+            i = int(np.argmin(scal))
+            winners[name] = i
+            emit(f"pareto,{op},{variant},{n},{name},time_us,"
+                 f"{cols[METRIC_TIME][i] * 1e6:.3f},"
+                 f"cfg={json.dumps(cands[i], sort_keys=True)}")
+            emit(f"pareto,{op},{variant},{n},{name},energy_mj,"
+                 f"{cols[METRIC_ENERGY][i] * 1e3:.4f},scalar={scal[i]:.6g}")
+
+        i_lat, i_eng = winners["latency"], winners["energy"]
+        flipped = cands[i_lat] != cands[i_eng] and \
+            cols[METRIC_ENERGY][i_eng] < cols[METRIC_ENERGY][i_lat]
+        flips += flipped
+        saved = 1.0 - cols[METRIC_ENERGY][i_eng] / cols[METRIC_ENERGY][i_lat]
+        emit(f"pareto,{op},{variant},{n},energy_vs_latency,winner_flips,"
+             f"{int(flipped)},joules_saved={saved:.2%}")
+
+    failures: List[str] = []
+    if not flips:
+        failures.append(
+            "no workload flipped winners between the latency and energy "
+            "policies with lower modeled joules — the policy layer is not "
+            "changing any answer")
+    emit(f"pareto,ALL,,,energy_vs_latency,flips,{flips},gate>=1")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Per-policy sweep winners + Pareto front benchmark")
+    ap.add_argument("--json", default=None,
+                    help="write the rows + gate verdict here "
+                         "(e.g. BENCH_pareto.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced case matrix for CI")
+    args = ap.parse_args(argv)
+
+    rows: List[str] = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    failures = run(emit, seed=args.seed, smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "pareto", "seed": args.seed,
+                       "smoke": bool(args.smoke), "profile": PROFILE,
+                       "policies": list(POLICIES), "rows": rows,
+                       "failures": failures},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    for failure in failures:
+        print(f"[bench-pareto] FAIL: {failure}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -69,10 +69,10 @@ def run(emit, seed: int = 0, smoke: bool = False,
 
         # source device: journal the exhaustive sweep (what transfer reads)
         ExhaustiveSearch(journal_dir=journal_dir).tune(
-            build_space(wl, spec=src), CostModelObjective(src))
+            build_space(wl, src), CostModelObjective(src))
 
         # target device: ground-truth optimum, then cold vs warm search
-        space = build_space(wl, spec=dst)
+        space = build_space(wl, dst)
         ex = ExhaustiveSearch().tune(space, CostModelObjective(dst))
         for s in seeds:
             cold = TransferBayesianTuner(seed=s, max_evals=MAX_EVALS).tune(

@@ -12,7 +12,10 @@ Prints ``name,...`` CSV rows:
   ml_predict          — learned-predictor rank latency + holdout accuracy;
   online              — OnlineTuner per-decode-step overhead vs untimed;
   transfer            — cross-device warm-start vs cold evals-to-optimum
-      (the BENCH_transfer gate: warm must halve cold's evaluation bill).
+      (the BENCH_transfer gate: warm must halve cold's evaluation bill);
+  pareto              — per-policy sweep winners + Pareto-front sizes
+      (the BENCH_pareto gate: the energy policy must flip at least one
+      winner with strictly lower modeled joules).
 
 ``--seed`` flows into every stochastic section so CI runs are
 reproducible; ``--json-dir`` writes one BENCH_<SECTION>.json per section
@@ -31,7 +34,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
-                         "resolve,blocks,sweep,ml_predict,online,transfer")
+                         "resolve,blocks,sweep,ml_predict,online,transfer,"
+                         "pareto")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -81,11 +85,14 @@ def main() -> None:
     if begin("online"):
         from benchmarks.bench_online import run as run_online
         run_online(emit, seed=args.seed, smoke=args.smoke)
-    transfer_failures = []
+    gate_failures = []
     if begin("transfer"):
         from benchmarks.bench_transfer import run as run_transfer
-        transfer_failures = run_transfer(emit, seed=args.seed,
-                                         smoke=args.smoke)
+        gate_failures += run_transfer(emit, seed=args.seed,
+                                      smoke=args.smoke)
+    if begin("pareto"):
+        from benchmarks.bench_pareto import run as run_pareto
+        gate_failures += run_pareto(emit, seed=args.seed, smoke=args.smoke)
 
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)
@@ -97,9 +104,9 @@ def main() -> None:
                           f, indent=1, sort_keys=True)
             print(f"# wrote {path}", file=sys.stderr)
     print(f"# benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
-    for failure in transfer_failures:
+    for failure in gate_failures:
         print(f"# FAIL: {failure}", file=sys.stderr)
-    if transfer_failures:
+    if gate_failures:
         raise SystemExit(1)
 
 

@@ -6,8 +6,9 @@ Public API:
   BayesianTuner              — BO with GP surrogate + EI (paper IV-B)
   ExhaustiveSearch, RandomSearch
   phi, efficiency            — portability metric (paper VI)
-  TuningDB, get_config, tune_offline — offline/online deployment flow
-                               (deprecated shims; use repro.tuning)
+  TuningDB                   — offline config store (canonical home:
+                               repro.tuning.db; the legacy repro.core.tuner
+                               facade was removed — use repro.tuning)
 """
 from repro.core.analytical import AnalyticalTuner
 from repro.core.bayesian import BayesianTuner, TuneResult
@@ -17,7 +18,7 @@ from repro.core.objective import (CachedObjective, CostModelObjective,
                                   Measurement, Objective, PENALTY_TIME,
                                   TPUCostModelObjective, WallClockObjective)
 from repro.core.space import Config, ParamSpec, SearchSpace, Workload, build_space
-from repro.core.tuner import TuningDB, get_config, global_db, tune_offline
+from repro.tuning.db import TuningDB
 
 __all__ = [
     "AnalyticalTuner", "BayesianTuner", "TuneResult", "ExhaustiveSearch",
@@ -25,5 +26,5 @@ __all__ = [
     "Measurement", "Objective", "PENALTY_TIME", "CostModelObjective",
     "TPUCostModelObjective",
     "WallClockObjective", "Config", "ParamSpec", "SearchSpace", "Workload",
-    "build_space", "TuningDB", "get_config", "global_db", "tune_offline",
+    "build_space", "TuningDB",
 ]

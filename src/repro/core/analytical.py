@@ -64,7 +64,7 @@ def resources(space: SearchSpace, cfg: Config) -> Dict[str, float]:
     # blocks.plan while the package is still initializing
     from repro.kernels.blocks.plan import plan_for
 
-    return plan_for(space.workload, cfg, spec=space.spec).resources()
+    return plan_for(space.workload, cfg, profile=space.spec).resources()
 
 
 def score(space: SearchSpace, cfg: Config,

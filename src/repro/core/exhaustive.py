@@ -21,17 +21,23 @@ class ExhaustiveSearch:
     ``prune="analytical"`` measures only the ``top_k`` model-ranked
     candidates (``stopped_by`` then truthfully reports ``"pruned"`` —
     a pruned sweep no longer guarantees the optimum).
+
+    ``policy`` picks the winner from the sweep's Pareto front instead of
+    the fastest config (see ``repro.core.policy``); the journal stays
+    keyed by the RAW objective, so one sweep's measurements serve every
+    policy.
     """
 
     name = "exhaustive"
 
     def __init__(self, journal_dir: Optional[str] = None,
                  prune: Optional[str] = None, top_k: Optional[int] = None,
-                 chunk: int = 1024):
+                 chunk: int = 1024, policy=None):
         self.journal_dir = journal_dir
         self.prune = prune
         self.top_k = top_k
         self.chunk = chunk
+        self.policy = policy
 
     def tune(self, space: SearchSpace, objective: Objective) -> TuneResult:
         # deferred import: repro.tuning.session imports this module
@@ -43,7 +49,7 @@ class ExhaustiveSearch:
                                                 space.workload, objective)
         result = run_sweep(space, objective, journal=journal,
                            prune=self.prune, top_k=self.top_k,
-                           chunk=self.chunk)
+                           chunk=self.chunk, policy=self.policy)
         return result.as_tune_result()
 
 

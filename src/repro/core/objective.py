@@ -1,4 +1,4 @@
-"""Objective functions mapping (workload, config) -> execution time (seconds).
+"""Objective functions mapping (workload, config) -> a metric vector.
 
 Mirrors the paper's measurement protocol:
   - repeated executions, median taken (paper: 100 runs to damp run-to-run
@@ -7,13 +7,30 @@ Mirrors the paper's measurement protocol:
     to a large penalty value (paper §IV-B);
   - the objective is a black box to the ML-based search.
 
-Two families:
-  * WallClockObjective  — genuinely times a compiled callable on this host.
-  * TPUCostModelObjective — a v5e timing model (DESIGN.md §2) used as the
-    offline-tuning "device". It intentionally models more mechanisms (DMA
-    ramp, issue pipelines, pass overheads, mixed-radix penalties) than the
-    analytical guideline consumes, so analytical-vs-BO comparisons on it are
-    meaningful.
+A :class:`Measurement` carries a **metric vector** (``time_s`` always;
+model-backed objectives add ``energy_j`` and ``peak_vmem_bytes``), with
+``time_s`` kept as the scalar-compatible primary field — every pre-vector
+consumer keeps working unchanged.  Which metric (or combination) a search
+actually minimizes is a *policy* decision (``repro.core.policy``), not an
+objective property.
+
+The objective family is profile-generalized: every architectural constant
+comes from a :class:`~repro.hw.profiles.HardwareProfile`, so the same
+model retargets across devices by swapping the profile.
+
+  * ``WallClockObjective`` — genuinely times a compiled callable on this
+    host; emits ``time_s`` only.
+  * ``CostModelObjective(profile)`` — a deterministic timing + energy
+    model for one hardware profile, used as the offline-tuning "device".
+    It intentionally models more mechanisms (DMA ramp, issue pipelines,
+    pass overheads, mixed-radix penalties) than the analytical guideline
+    consumes, so analytical-vs-BO comparisons on it are meaningful.  Under
+    ``tpu_v5e`` its latency arithmetic is bit-identical to the historical
+    ``TPUCostModelObjective`` (pinned by fixture test); the energy model
+    (``idle_w``/``peak_compute_w``/``hbm_pj_per_byte`` profile fields) is
+    additional output, never an input to the latency path.
+  * ``PolicyObjective`` (``repro.core.policy``) — adapts any vector
+    objective to the scalar lower-is-better protocol under a policy.
 """
 from __future__ import annotations
 
@@ -21,7 +38,8 @@ import dataclasses
 import hashlib
 import math
 import time
-from typing import Callable, Dict, Optional, Sequence
+import warnings
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,19 +60,89 @@ from repro.hw.profiles import (
 
 PENALTY_TIME = 60.0  # seconds — the paper's 1-minute clamp
 
+# canonical metric names (the vector axes every layer agrees on)
+METRIC_TIME = "time_s"
+METRIC_ENERGY = "energy_j"
+METRIC_PEAK_VMEM = "peak_vmem_bytes"
+
+# per-metric penalty clamps for invalid/failed measurements: each value is
+# far beyond anything a real config can produce, so an invalid config loses
+# on EVERY metric (and therefore under every policy and on the Pareto front)
+METRIC_PENALTIES: Dict[str, float] = {
+    METRIC_TIME: PENALTY_TIME,
+    METRIC_ENERGY: 1e6,          # joules; worst real config is ~1e4
+    METRIC_PEAK_VMEM: float(2**40),
+}
+
+# bump when the serialized Measurement layout changes
+MEASUREMENT_VERSION = 1
+
+
+def metric_penalty(name: str) -> float:
+    """The penalty clamp for one metric (PENALTY_TIME for unknown names)."""
+    return METRIC_PENALTIES.get(name, PENALTY_TIME)
+
 
 @dataclasses.dataclass
 class Measurement:
+    """One evaluation: a metric vector with ``time_s`` as the primary axis.
+
+    ``time_s`` stays a plain field for scalar compatibility — everything
+    that predates vector objectives keeps reading it.  ``metrics`` is the
+    canonical vector; ``__post_init__`` guarantees it always contains
+    ``time_s`` (mirrored from the field), so ``Measurement(t, True)`` and
+    fully vector-valued constructions behave identically downstream.
+    """
+
     time_s: float
     valid: bool
     meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # time_s is authoritative: the metrics vector always mirrors it
+        self.metrics = dict(self.metrics)
+        self.metrics[METRIC_TIME] = self.time_s
+
+    def metric(self, name: str, default: Optional[float] = None) -> Optional[float]:
+        return self.metrics.get(name, default)
+
+    @property
+    def energy_j(self) -> Optional[float]:
+        """Modeled/measured joules; None for time-only objectives."""
+        return self.metrics.get(METRIC_ENERGY)
+
+    @property
+    def peak_vmem_bytes(self) -> Optional[float]:
+        """Peak on-chip working set; None for time-only objectives."""
+        return self.metrics.get(METRIC_PEAK_VMEM)
+
+    # -- versioned serialization (journals, DB entries, traces) -------------
+
+    def to_dict(self) -> Dict:
+        return {"version": MEASUREMENT_VERSION, "time_s": self.time_s,
+                "valid": self.valid, "metrics": dict(self.metrics),
+                "meta": dict(self.meta)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Measurement":
+        """Inverse of ``to_dict``; version-0 dicts (no ``metrics``) load as
+        time-only vectors."""
+        metrics = dict(d.get("metrics") or {})
+        time_s = float(d.get("time_s", metrics.get(METRIC_TIME, PENALTY_TIME)))
+        return cls(time_s, bool(d.get("valid", True)),
+                   meta=dict(d.get("meta") or {}), metrics=metrics)
 
 
 class Objective:
-    """Black-box objective: lower is better."""
+    """Black-box objective: lower is better (on every metric)."""
 
     def __call__(self, space: SearchSpace, cfg: Config) -> Measurement:
         raise NotImplementedError
+
+    def metric_names(self) -> Tuple[str, ...]:
+        """The metric axes this objective emits; ``time_s`` always first."""
+        return (METRIC_TIME,)
 
     def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
                    assume_valid: bool = False) -> np.ndarray:
@@ -72,11 +160,34 @@ class Objective:
             out[i] = m.time_s if m.valid else PENALTY_TIME
         return out
 
+    def batch_eval_metrics(self, space: SearchSpace, cfgs: Sequence[Config],
+                           *, assume_valid: bool = False
+                           ) -> Dict[str, np.ndarray]:
+        """Vector form of ``batch_eval``: one array per metric name.
+
+        Invalid/failed configs are clamped to each metric's penalty value
+        (``metric_penalty``), so they lose under every policy.  Time-only
+        objectives delegate to ``batch_eval`` — subclasses that override
+        only the scalar fast path keep it for free.
+        """
+        names = self.metric_names()
+        if names == (METRIC_TIME,):
+            return {METRIC_TIME: self.batch_eval(space, cfgs,
+                                                 assume_valid=assume_valid)}
+        cols = {n: np.empty(len(cfgs), dtype=np.float64) for n in names}
+        for i, cfg in enumerate(cfgs):
+            m = self(space, cfg)
+            for n in names:
+                cols[n][i] = (m.metric(n, metric_penalty(n)) if m.valid
+                              else metric_penalty(n))
+        return cols
+
     def signature(self) -> str:
         """Stable identity used to key sweep journals (see tuning/sweep.py).
 
-        Two objectives with the same signature must assign the same time to
-        the same (workload, config); override when parameters change that.
+        Two objectives with the same signature must assign the same metric
+        vector to the same (workload, config); override when parameters
+        change that.
         """
         return type(self).__name__
 
@@ -313,14 +424,39 @@ class CostModelObjective(Objective):
     (needs >=2 programs in flight to double-buffer). Every architectural
     constant comes from the :class:`~repro.hw.profiles.HardwareProfile`, so
     the same model retargets by swapping the profile — the paper's
-    portability mechanism. Under ``tpu_v5e`` the arithmetic is bit-identical
-    to the historical ``TPUCostModelObjective`` (pinned by fixture test).
+    portability mechanism. Under ``tpu_v5e`` the latency arithmetic is
+    bit-identical to the historical ``TPUCostModelObjective`` (pinned by
+    fixture test).
+
+    Beyond ``time_s`` the model emits two more metric axes from the same
+    intermediates:
+
+    * ``energy_j``  — ``idle_w * t + peak_compute_w * t_comp
+      + hbm_pj_per_byte * 1e-12 * bytes`` (static draw for the kernel's
+      duration, dynamic draw while compute units are busy, per-byte memory
+      access energy).  Energy is derived *from* the latency terms, never
+      fed back into them.
+    * ``peak_vmem_bytes`` — the double-buffered block working set.
     """
 
-    def __init__(self, spec: Optional[HardwareProfile] = None,
-                 noise: float = 0.0):
-        self.spec = spec if spec is not None else active_profile()
+    def __init__(self, profile: Optional[HardwareProfile] = None,
+                 noise: float = 0.0, *,
+                 spec: Optional[HardwareProfile] = None):
+        if spec is not None:
+            warnings.warn("CostModelObjective(spec=...) is deprecated; "
+                          "pass profile=...", DeprecationWarning, stacklevel=2)
+            if profile is None:
+                profile = spec
+        self.spec = profile if profile is not None else active_profile()
         self.noise = noise
+
+    @property
+    def profile(self) -> HardwareProfile:
+        """Canonical name for the hardware profile (``spec`` predates it)."""
+        return self.spec
+
+    def metric_names(self) -> Tuple[str, ...]:
+        return (METRIC_TIME, METRIC_ENERGY, METRIC_PEAK_VMEM)
 
     def _jitter(self, wl: Workload, cfg: Config) -> float:
         if not self.noise:
@@ -388,10 +524,16 @@ class CostModelObjective(Objective):
         t = passes * (spec.kernel_launch_s + t_body / passes + work["steps"] / passes * spec.pass_sync_s)
         t *= 1.0 + 0.25 * work.get("mixed_radix", 0.0)
         t *= self._jitter(wl, cfg)
+        # energy/memory axes, derived from the latency intermediates (the
+        # latency value above is already final — nothing below feeds back)
+        energy = (spec.idle_w * t + spec.peak_compute_w * t_comp
+                  + spec.hbm_pj_per_byte * 1e-12 * total_bytes)
+        peak_vmem = 2.0 * block_bytes   # double-buffered working set
         return Measurement(
             t, True,
             meta={"t_comp": t_comp, "t_mem": t_mem, "grid": grid,
                   "passes": passes, "flops": total_flops, "bytes": total_bytes},
+            metrics={METRIC_ENERGY: energy, METRIC_PEAK_VMEM: peak_vmem},
         )
 
     def signature(self) -> str:
@@ -404,13 +546,24 @@ class CostModelObjective(Objective):
 
     def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
                    assume_valid: bool = False) -> np.ndarray:
+        """Vectorized fast path: the time column of ``batch_eval_metrics``."""
+        return self.batch_eval_metrics(space, cfgs,
+                                       assume_valid=assume_valid)[METRIC_TIME]
+
+    def batch_eval_metrics(self, space: SearchSpace, cfgs: Sequence[Config],
+                           *, assume_valid: bool = False
+                           ) -> Dict[str, np.ndarray]:
         """Vectorized fast path: the whole candidate set in array ops.
 
         Mirrors ``__call__`` branch for branch; the only per-config Python
         left is knob extraction (and the sha256 jitter when noise is on).
+        The time column is computed first and independently — the energy
+        and memory columns are derived afterwards, so the latency numbers
+        are bit-identical to the pre-vector implementation.
         """
         if not len(cfgs):
-            return np.empty(0, dtype=np.float64)
+            return {n: np.empty(0, dtype=np.float64)
+                    for n in self.metric_names()}
         wl, spec = space.workload, self.spec
         eb = effective_element_bytes(wl.op, wl.dtype)
         cols = _KnobCols(cfgs)
@@ -476,6 +629,11 @@ class CostModelObjective(Objective):
             t = t * (1.0 + 0.25 * work["mixed_radix"])
             if self.noise:
                 t = t * np.array([self._jitter(wl, c) for c in cfgs])
+            # derived metric columns — same expressions as the scalar path,
+            # computed after (and never feeding into) the time column
+            energy = (spec.idle_w * t + spec.peak_compute_w * t_comp
+                      + spec.hbm_pj_per_byte * 1e-12 * total_bytes)
+            peak_vmem = 2.0 * block_bytes * np.ones_like(t)
 
         t = np.nan_to_num(t, nan=PENALTY_TIME, posinf=PENALTY_TIME,
                           neginf=PENALTY_TIME)
@@ -483,7 +641,14 @@ class CostModelObjective(Objective):
             valid = np.fromiter((space.is_valid(c) for c in cfgs),
                                 dtype=bool, count=len(cfgs))
             t = np.where(valid, t, PENALTY_TIME)
-        return t
+        # the exact penalty clamp marks a failed/invalid row (the batched
+        # protocol's convention); such rows lose on every metric axis
+        pen_e, pen_v = metric_penalty(METRIC_ENERGY), metric_penalty(METRIC_PEAK_VMEM)
+        bad = t == PENALTY_TIME
+        energy = np.nan_to_num(energy, nan=pen_e, posinf=pen_e, neginf=pen_e)
+        return {METRIC_TIME: t,
+                METRIC_ENERGY: np.where(bad, pen_e, energy),
+                METRIC_PEAK_VMEM: np.where(bad, pen_v, peak_vmem)}
 
 
 # Backwards-compatible name: the objective predates the profile layer and
@@ -515,21 +680,28 @@ class CachedObjective(Objective):
     def signature(self) -> str:
         return self.inner.signature()
 
-    def seed(self, space: SearchSpace,
-             history: Sequence[tuple]) -> None:
+    def metric_names(self) -> Tuple[str, ...]:
+        return self.inner.metric_names()
+
+    def seed(self, space: SearchSpace, history: Sequence[tuple],
+             metrics: Optional[Sequence[Mapping[str, float]]] = None) -> None:
         """Pre-load (config, time) pairs as cached measurements.
 
         Used by consumers that obtained times outside this cache — e.g. a
         journal-resumed sweep — and need later scalar calls to answer from
         those exact numbers instead of re-measuring (`evaluations` is not
-        incremented; nothing fresh was run).
+        incremented; nothing fresh was run).  ``metrics``, when given, is a
+        parallel sequence of metric vectors (journal version 3 records
+        them); without it the seeded entries are time-only vectors.
         """
         wl_key = space.workload.key
-        for cfg, t in history:
+        for i, (cfg, t) in enumerate(history):
             key = f"{wl_key}|{tuple(sorted(cfg.items()))}"
             if key not in self.cache:
                 t = float(t)
-                self.cache[key] = Measurement(t, t != PENALTY_TIME)
+                vec = dict(metrics[i]) if metrics is not None else {}
+                self.cache[key] = Measurement(t, t != PENALTY_TIME,
+                                              metrics=vec)
 
     def batch_eval(self, space: SearchSpace, cfgs: Sequence[Config], *,
                    assume_valid: bool = False) -> np.ndarray:
@@ -553,4 +725,44 @@ class CachedObjective(Objective):
         for i, k in enumerate(keys):
             m = self.cache[k]
             out[i] = m.time_s if m.valid else PENALTY_TIME
+        return out
+
+    def batch_eval_metrics(self, space: SearchSpace, cfgs: Sequence[Config],
+                           *, assume_valid: bool = False
+                           ) -> Dict[str, np.ndarray]:
+        names = self.metric_names()
+        wl_key = space.workload.key
+        keys = [f"{wl_key}|{tuple(sorted(c.items()))}" for c in cfgs]
+        # a cached VALID entry missing a requested metric (seeded from a
+        # pre-vector journal, or cached through the times-only protocol)
+        # is re-run to fill the vector — but its cached time stays
+        # authoritative, so seeded sweep times are never re-measured away
+        missing = []
+        for i, k in enumerate(keys):
+            m = self.cache.get(k)
+            if m is None or (m.valid
+                             and any(n not in m.metrics for n in names)):
+                missing.append(i)
+        if missing:
+            cols = self.inner.batch_eval_metrics(
+                space, [cfgs[i] for i in missing], assume_valid=assume_valid)
+            for j, i in enumerate(missing):
+                t = float(cols[METRIC_TIME][j])
+                vec = {n: float(cols[n][j]) for n in names}
+                prev = self.cache.get(keys[i])
+                if prev is None:
+                    self.cache[keys[i]] = Measurement(t, t != PENALTY_TIME,
+                                                      metrics=vec)
+                    self.evaluations += 1
+                else:   # upgrade: keep the seeded time, adopt fresh metrics
+                    vec.update(prev.metrics)
+                    self.cache[keys[i]] = Measurement(prev.time_s, prev.valid,
+                                                      meta=prev.meta,
+                                                      metrics=vec)
+        out = {n: np.empty(len(cfgs), dtype=np.float64) for n in names}
+        for i, k in enumerate(keys):
+            m = self.cache[k]
+            for n in names:
+                out[n][i] = (m.metric(n, metric_penalty(n)) if m.valid
+                             else metric_penalty(n))
         return out

@@ -17,6 +17,7 @@ import dataclasses
 import inspect
 import itertools
 import math
+import warnings
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -415,18 +416,26 @@ _SPACE_BUILDERS: Dict[str, Callable[[Workload], SearchSpace]] = {
 
 
 def build_space(wl: Workload,
+                profile: Optional[HardwareProfile] = None, *,
                 spec: Optional[HardwareProfile] = None) -> SearchSpace:
-    """Search space for ``wl`` bounded by ``spec`` (default: active profile).
+    """Search space for ``wl`` bounded by ``profile`` (default: active
+    profile).  ``spec=`` is a deprecated alias for ``profile=`` (the name
+    the pre-policy API used — see docs/hardware.md).
 
     Externally registered builders that predate the profile layer may not
     take a ``spec`` argument; they are called without one and keep their
     own bounds.
     """
+    if spec is not None:
+        warnings.warn("build_space(spec=...) is deprecated; pass profile=...",
+                      DeprecationWarning, stacklevel=2)
+        if profile is None:
+            profile = spec
     try:
         builder = _SPACE_BUILDERS[wl.op]
     except KeyError:
         raise KeyError(f"no search space registered for op={wl.op!r}") from None
-    if spec is None:
+    if profile is None:
         return builder(wl)
     try:
         params = inspect.signature(builder).parameters
@@ -434,7 +443,7 @@ def build_space(wl: Workload,
             p.kind is p.VAR_KEYWORD for p in params.values())
     except (TypeError, ValueError):
         accepts_spec = False
-    return builder(wl, spec=spec) if accepts_spec else builder(wl)
+    return builder(wl, spec=profile) if accepts_spec else builder(wl)
 
 
 def register_space(op: str, builder: Callable[[Workload], SearchSpace]) -> None:

@@ -301,7 +301,7 @@ def transfer_seed(session, journals, *, max_evals: int = 16, seed: int = 0,
         if got is None:
             continue
         hist, _ = got
-        space = build_space(wl, spec=session.spec)
+        space = build_space(wl, session.spec)
         cached = CachedObjective(CostModelObjective(session.spec))
         res = TransferBayesianTuner(seed=seed, max_evals=max_evals).tune(
             space, cached, (hist,))

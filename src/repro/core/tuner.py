@@ -1,63 +1,15 @@
-"""Deprecated tuner facade — use :mod:`repro.tuning` instead.
+"""Removed. ``repro.core.tuner`` was a deprecated facade; it is gone.
 
-Historical entry points (``get_config``, ``tune_offline``, ``global_db``)
-now delegate to a :class:`repro.tuning.TunerSession` and emit
-``DeprecationWarning``. They return the same configs as before: the shims
-resolve *raw* (pre-normalization) configs, exactly like the old code, so
-legacy callers that validate against the search space keep working.
+Migration (see docs/tuning.md, "Migrating from the legacy facade"):
 
-``TuningDB`` lives in :mod:`repro.tuning.db`; the re-export here keeps
-``from repro.core import TuningDB`` imports alive.
+* ``get_config(wl)``      -> ``repro.tuning.TunerSession.resolve(wl)``
+  (or ``resolve_raw`` for the pre-normalization config)
+* ``tune_offline(wl,...)``-> ``repro.tuning.TunerSession.tune(wl, ...)``
+* ``global_db()``         -> ``repro.tuning.default_session().db``
+* ``TuningDB``            -> ``repro.tuning.db.TuningDB``
+  (still re-exported as ``repro.core.TuningDB``)
 """
-from __future__ import annotations
-
-import warnings
-from typing import Optional
-
-from repro.core.bayesian import TuneResult
-from repro.core.objective import Objective
-from repro.core.space import Config, Workload
-from repro.tuning.db import DEFAULT_DB_PATH, TuningDB
-
-__all__ = ["DEFAULT_DB_PATH", "TuningDB", "get_config", "global_db",
-           "tune_offline"]
-
-
-def _warn(old: str, new: str) -> None:
-    warnings.warn(f"repro.core.tuner.{old} is deprecated; use {new}",
-                  DeprecationWarning, stacklevel=3)
-
-
-def _session(db: Optional[TuningDB]):
-    from repro.tuning.session import TunerSession, default_session
-
-    if db is None:
-        return default_session()
-    # cache the session on the db itself (same lifetime, no global registry)
-    # so analytical memoization and the resolve cache still apply per DB
-    session = getattr(db, "_legacy_session", None)
-    if session is None:
-        session = db._legacy_session = TunerSession(db=db)
-    return session
-
-
-def global_db() -> TuningDB:
-    """Deprecated: the default session's DB."""
-    _warn("global_db()", "repro.tuning.default_session().db")
-    return _session(None).db
-
-
-def get_config(wl: Workload, db: Optional[TuningDB] = None) -> Config:
-    """Deprecated online entry point: DB hit, else analytical suggestion."""
-    _warn("get_config()", "repro.tuning.TunerSession.resolve")
-    return _session(db).resolve_raw(wl)
-
-
-def tune_offline(wl: Workload, method: str = "bayesian",
-                 objective: Optional[Objective] = None,
-                 db: Optional[TuningDB] = None, seed: int = 0,
-                 max_evals: int = 64) -> TuneResult:
-    """Deprecated offline tuning pass; persists the winner into the DB."""
-    _warn("tune_offline()", "repro.tuning.TunerSession.tune")
-    return _session(db).tune(wl, method=method, objective=objective,
-                             seed=seed, max_evals=max_evals)
+raise ImportError(
+    "repro.core.tuner was removed: use repro.tuning "
+    "(TunerSession.resolve / TunerSession.tune / default_session().db; "
+    "TuningDB lives in repro.tuning.db) — see docs/tuning.md")

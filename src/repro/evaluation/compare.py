@@ -17,14 +17,25 @@ Emitted metrics per (op, methodology) and overall:
   * **mean/max slowdown** — achieved time / optimum;
   * **evaluation counts** — what each methodology paid for its answer
     (the paper's Fig-4 axis).
+
+``policies`` extends the table to the multi-objective setting: for every
+non-latency policy (``energy``, ``edp``, ``memory_cap`` — see
+:mod:`repro.core.policy`) the full sweep's metric vectors define the
+policy optimum, each method re-runs on a
+:class:`~repro.core.policy.PolicyObjective` wrapper of the SAME cache,
+and a per-(method, policy) Phi lands in ``report["per_policy"]`` — any
+cell above 1 is a violation exactly like the latency gate.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.exhaustive import ExhaustiveSearch
 from repro.core.objective import (CachedObjective, CostModelObjective,
                                   Objective)
+from repro.core.policy import PolicyObjective, get_policy, policy_scalar_cols
 from repro.core.space import Workload, build_space
 from repro.hw.profiles import HardwareProfile, get_profile
 from repro.tuning.session import get_strategy
@@ -64,7 +75,8 @@ def compare_methods(workloads: Iterable[Workload],
                     objective_factory: Optional[Callable[[], Objective]] = None,
                     *, seed: int = 0, max_evals: int = 20,
                     journal_dir: Optional[str] = None,
-                    profile: Optional[HardwareProfile] = None) -> Dict:
+                    profile: Optional[HardwareProfile] = None,
+                    policies: Sequence[str] = ("latency",)) -> Dict:
     """Run every methodology against the exhaustive optimum.
 
     One ``CachedObjective`` per workload is shared by the sweep and every
@@ -75,11 +87,18 @@ def compare_methods(workloads: Iterable[Workload],
 
     ``profile`` bounds the spaces and (absent an explicit factory) the
     cost model by that device; default is the process-wide active profile.
+
+    ``policies`` adds per-policy scoring: the base table is always the
+    latency one; each non-latency entry re-runs every method on a
+    :class:`~repro.core.policy.PolicyObjective` over the same cache and
+    scores it against that policy's scalarized optimum (the min over the
+    exhaustive sweep's metric vectors).
     """
     rows: List[Dict] = []
+    policy_keys: List[str] = []
     for wl in workloads:
         wl = wl.canonical()
-        space = build_space(wl, spec=profile)
+        space = build_space(wl, profile)
         obj = CachedObjective(objective_factory() if objective_factory
                               else CostModelObjective(profile))
         ex = ExhaustiveSearch(journal_dir=journal_dir).tune(space, obj)
@@ -109,11 +128,50 @@ def compare_methods(workloads: Iterable[Workload],
                 "stopped_by": res.stopped_by,
                 "config": dict(res.best_config),
             }
+        pols = [get_policy(p, space.spec) for p in policies]
+        if not policy_keys:
+            policy_keys = [p.key for p in pols]
+        extra = [p for p in pols if p.name != "latency"]
+        if extra:
+            hist_cfgs = [c for c, _ in ex.history]
+            cols = obj.batch_eval_metrics(space, hist_cfgs,
+                                          assume_valid=True)
+            row["policies"] = {}
+        for pol in extra:
+            scal = policy_scalar_cols(pol, cols)
+            best_i = int(np.argmin(scal))
+            pol_best = float(scal[best_i])
+            cell = {"best_scalar": pol_best,
+                    "best_config": dict(hist_cfgs[best_i]),
+                    "methods": {}}
+            pobj = PolicyObjective(obj, pol)
+            for name in methods:
+                res = get_strategy(name)(space, pobj, seed=seed,
+                                         max_evals=max_evals,
+                                         journal_dir=journal_dir)
+                if not np.isfinite(pol_best) and not np.isfinite(res.best_time):
+                    # a cap no config satisfies: optimum and method are
+                    # equally impossible, not a violation
+                    eff = slow = 1.0
+                else:
+                    eff = pol_best / res.best_time
+                    slow = res.best_time / pol_best
+                cell["methods"][name] = {
+                    "scalar": res.best_time,
+                    "slowdown": slow,
+                    "efficiency": eff,
+                    "evaluations": res.evaluations,
+                    "stopped_by": res.stopped_by,
+                    "config": dict(res.best_config),
+                }
+            row["policies"][pol.key] = cell
         rows.append(row)
 
     report = {"methods": list(methods), "workloads": rows,
               "profile": rows[0]["profile"] if rows else None,
-              "per_op": {}, "overall": {}, "violations": []}
+              "policies": policy_keys,
+              "per_op": {}, "overall": {}, "per_policy": {},
+              "violations": []}
 
     ops = sorted({r["op"] for r in rows})
     for name in methods:
@@ -150,6 +208,38 @@ def compare_methods(workloads: Iterable[Workload],
                 report["violations"].append(
                     f"{name} beat exhaustive on {r['workload']}: "
                     f"efficiency={r['methods'][name]['efficiency']:.6f}")
+    for pol_key in policy_keys:
+        if pol_key == "latency":
+            # the base table IS the latency policy; mirror it so the
+            # per-(method, policy) gate sees a uniform structure
+            report["per_policy"]["latency"] = {
+                name: {"phi": report["overall"][name]["phi"],
+                       "mean_slowdown":
+                           report["overall"][name]["mean_slowdown"],
+                       "total_evaluations":
+                           report["overall"][name]["total_evaluations"],
+                       "n": len(rows)}
+                for name in methods}
+            continue
+        per: Dict[str, Dict] = {}
+        for name in methods:
+            cells = [r["policies"][pol_key]["methods"][name] for r in rows]
+            effs = [c["efficiency"] for c in cells]
+            slows = [c["slowdown"] for c in cells]
+            per[name] = {
+                "phi": _phi_raw(effs),
+                "mean_slowdown": sum(slows) / len(slows),
+                "total_evaluations": sum(c["evaluations"] for c in cells),
+                "n": len(cells),
+            }
+            for r in rows:
+                c = r["policies"][pol_key]["methods"][name]
+                if c["efficiency"] > 1.0 + EFFICIENCY_EPS:
+                    report["violations"].append(
+                        f"[policy={pol_key}] {name} beat the {pol_key} "
+                        f"optimum on {r['workload']}: "
+                        f"efficiency={c['efficiency']:.6f}")
+        report["per_policy"][pol_key] = per
     report["exhaustive_total_evaluations"] = sum(
         r["exhaustive_evaluations"] for r in rows)
     return report
@@ -167,6 +257,14 @@ def check_report(report: Dict) -> List[str]:
         if agg["phi"] > 1.0 + EFFICIENCY_EPS:
             failures.append(f"overall Phi({name})={agg['phi']:.6f} > 1: "
                             f"exhaustive search was beaten")
+    for pol_key, per in report.get("per_policy", {}).items():
+        if pol_key == "latency":
+            continue    # mirrors `overall`, already checked above
+        for name, agg in per.items():
+            if agg["phi"] > 1.0 + EFFICIENCY_EPS:
+                failures.append(
+                    f"Phi({name}, policy={pol_key})={agg['phi']:.6f} > 1: "
+                    f"the {pol_key} optimum was beaten")
     return failures
 
 
@@ -178,7 +276,8 @@ def compare_methods_matrix(workloads: Iterable[Workload],
                            methods: Sequence[str] = DEFAULT_MATRIX_METHODS,
                            profiles: Sequence[str] = DEFAULT_MATRIX_PROFILES,
                            *, seed: int = 0, max_evals: int = 20,
-                           journal_dir: Optional[str] = None) -> Dict:
+                           journal_dir: Optional[str] = None,
+                           policies: Sequence[str] = ("latency",)) -> Dict:
     """``compare_methods`` once per hardware profile, shared journal dir.
 
     Profiles run in order; every sweep journals into the same directory, so
@@ -194,7 +293,7 @@ def compare_methods_matrix(workloads: Iterable[Workload],
         prof = get_profile(name)
         matrix[name] = compare_methods(
             wls, methods, seed=seed, max_evals=max_evals,
-            journal_dir=journal_dir, profile=prof)
+            journal_dir=journal_dir, profile=prof, policies=policies)
     return {"profiles": list(profiles), "methods": list(methods),
             "reports": matrix}
 
@@ -249,4 +348,13 @@ def format_report(report: Dict) -> str:
         lines.append(f"{'OVERALL':<10} {name:<11} {agg['phi']:6.3f} "
                      f"{agg['mean_slowdown']:9.3f} "
                      f"{agg['total_evaluations']:10d}")
+    extra = [k for k in report.get("policies", ()) if k != "latency"]
+    if extra:
+        lines.append("-" * len(header))
+        for pol_key in extra:
+            for name in report["methods"]:
+                agg = report["per_policy"][pol_key][name]
+                lines.append(f"{pol_key:<10} {name:<11} {agg['phi']:6.3f} "
+                             f"{agg['mean_slowdown']:9.3f} "
+                             f"{agg['total_evaluations']:10d}")
     return "\n".join(lines)

@@ -81,6 +81,10 @@ class HardwareProfile:
     dma_half_bytes: int = 64 * 2**10      # DMA ramp half-saturation point
     ilp_base: float = 0.55                # issue utilization at unroll=1
     ilp_slope: float = 0.15               # utilization gained per doubling
+    # --- power model (energy = idle + compute-activity + data-movement) ---
+    idle_w: float = 60.0                  # static draw while a kernel runs
+    peak_compute_w: float = 140.0         # dynamic draw of busy compute units
+    hbm_pj_per_byte: float = 150.0        # pJ per byte moved through HBM/DDR
     # --- mesh geometry ---
     chips_per_pod: int = 256
 
@@ -116,6 +120,9 @@ GPU_SM = HardwareProfile(
     dma_half_bytes=32 * 2**10,            # coalescing saturates earlier
     ilp_base=0.60,
     ilp_slope=0.10,
+    idle_w=90.0,                          # server-part static draw
+    peak_compute_w=310.0,                 # SM array at full issue
+    hbm_pj_per_byte=180.0,                # HBM2e access energy
     chips_per_pod=8,                      # one NVLink island
 )
 
@@ -144,6 +151,9 @@ CPU_INTERPRET = HardwareProfile(
     dma_half_bytes=4 * 2**10,             # streaming saturates quickly
     ilp_base=0.70,
     ilp_slope=0.10,
+    idle_w=20.0,                          # host package at light load
+    peak_compute_w=45.0,                  # vector units saturated
+    hbm_pj_per_byte=400.0,                # DDR access is energy-expensive
     chips_per_pod=1,
 )
 

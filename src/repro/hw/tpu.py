@@ -1,38 +1,12 @@
-"""Deprecated compatibility shim over :mod:`repro.hw.profiles`.
+"""Removed. ``repro.hw.tpu`` was a compatibility shim; it is gone.
 
-The machine model became data in the hardware-profile subsystem:
-``TpuSpec`` is an alias of :class:`repro.hw.profiles.HardwareProfile`
-(a strict superset of the old field set, same v5e defaults), and the
-model functions live in ``repro.hw.profiles`` with the numpy/math
-imports hoisted to module level.  ``V5E`` still resolves — with a
-``DeprecationWarning`` — to the registered ``tpu_v5e`` profile, so old
-imports keep working while call sites migrate.
+The machine model is data in :mod:`repro.hw.profiles`:
+
+* ``V5E`` / ``TpuSpec``  -> ``TPU_V5E`` / ``HardwareProfile``
+* model functions (``lane_utilization``, ``dma_efficiency``, ...) live in
+  ``repro.hw.profiles`` under the same names.
 """
-from __future__ import annotations
-
-import warnings
-
-from repro.hw.profiles import (  # noqa: F401  (re-exports)
-    TPU_V5E,
-    HardwareProfile as TpuSpec,
-    dma_efficiency,
-    dma_efficiency_arr,
-    dtype_bytes,
-    effective_element_bytes,
-    ilp_factor,
-    ilp_factor_arr,
-    lane_utilization,
-    lane_utilization_arr,
-    sublane_utilization,
-    sublane_utilization_arr,
-)
-
-
-def __getattr__(name: str):
-    if name == "V5E":
-        warnings.warn(
-            "repro.hw.tpu.V5E is deprecated; use the 'tpu_v5e' profile from "
-            "repro.hw.profiles (TPU_V5E / get_profile('tpu_v5e'))",
-            DeprecationWarning, stacklevel=2)
-        return TPU_V5E
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+raise ImportError(
+    "repro.hw.tpu was removed: use repro.hw.profiles "
+    "(TPU_V5E / HardwareProfile / get_profile('tpu_v5e')) — "
+    "see docs/hardware.md")

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Dict, Mapping, Optional, Tuple
 
 from repro.core.space import Workload, fit_block
@@ -409,7 +410,7 @@ def _large_fft_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile,
     sub_cfg["tile_n"] = n1
     col_wl = Workload(op="fft" if n2 <= cap else "large_fft", n=n2,
                       batch=batch * n1, dtype=wl.dtype, variant=wl.variant)
-    col = build_plan(col_wl, sub_cfg, spec=spec, seq_limit=seq_limit,
+    col = build_plan(col_wl, sub_cfg, profile=spec, seq_limit=seq_limit,
                      max_tile=cap)
     row = _fft_fused_plan(
         Workload(op="fft", n=n1, batch=batch * n2, dtype=wl.dtype,
@@ -473,12 +474,29 @@ def _matmul_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile
 # Entry points
 # ---------------------------------------------------------------------------
 
-def build_plan(wl: Workload, cfg: Mapping[str, int], *, spec: Optional[HardwareProfile] = None,
+def _resolve_profile(profile: Optional[HardwareProfile],
+                     spec: Optional[HardwareProfile]) -> HardwareProfile:
+    """Canonical ``profile=`` with the deprecated ``spec=`` alias."""
+    if spec is not None:
+        warnings.warn("spec=... is deprecated; pass profile=...",
+                      DeprecationWarning, stacklevel=3)
+        if profile is None:
+            profile = spec
+    return profile if profile is not None else active_profile()
+
+
+def build_plan(wl: Workload, cfg: Mapping[str, int], *,
+               profile: Optional[HardwareProfile] = None,
+               spec: Optional[HardwareProfile] = None,
                seq_limit: int = DEFAULT_SEQ_LIMIT,
                max_tile: Optional[int] = None) -> StagePlan:
-    """The staged execution of ``cfg`` on ``wl`` (uncached; see plan_for)."""
+    """The staged execution of ``cfg`` on ``wl`` (uncached; see plan_for).
+
+    ``profile`` is the canonical device argument; ``spec=`` is a
+    deprecated alias from the pre-policy API.
+    """
     wl = wl.canonical()
-    spec = spec if spec is not None else active_profile()
+    spec = _resolve_profile(profile, spec)
     if wl.op in ("scan", "ssd", "rglru"):
         if wl.op == "ssd":
             return _ssd_plan(wl, cfg, spec, seq_limit)
@@ -503,16 +521,22 @@ def _plan_cached(op: str, variant: str, n: int, batch: int, dtype: str,
                  cfg_items: Tuple[Tuple[str, int], ...], spec: HardwareProfile,
                  seq_limit: int, max_tile: Optional[int]) -> StagePlan:
     wl = Workload(op=op, n=n, batch=batch, dtype=dtype, variant=variant)
-    return build_plan(wl, dict(cfg_items), spec=spec, seq_limit=seq_limit,
+    return build_plan(wl, dict(cfg_items), profile=spec, seq_limit=seq_limit,
                       max_tile=max_tile)
 
 
-def plan_for(wl: Workload, cfg: Mapping[str, int], *, spec: Optional[HardwareProfile] = None,
+def plan_for(wl: Workload, cfg: Mapping[str, int], *,
+             profile: Optional[HardwareProfile] = None,
+             spec: Optional[HardwareProfile] = None,
              seq_limit: int = DEFAULT_SEQ_LIMIT,
              max_tile: Optional[int] = None) -> StagePlan:
     """Memoized ``build_plan`` — the resolve/dispatch hot path and the
-    featurizer hit the same plan thousands of times per space."""
+    featurizer hit the same plan thousands of times per space.
+
+    ``profile`` is the canonical device argument; ``spec=`` is a
+    deprecated alias from the pre-policy API.
+    """
     wl = wl.canonical()
-    spec = spec if spec is not None else active_profile()
+    spec = _resolve_profile(profile, spec)
     return _plan_cached(wl.op, wl.variant, wl.n, wl.batch, wl.dtype,
                         tuple(sorted(cfg.items())), spec, seq_limit, max_tile)

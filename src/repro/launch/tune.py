@@ -28,7 +28,10 @@ Methodology comparison (the paper's Table II as a CI artifact):
 
 runs analytical/ml/online/bayesian/random against the exhaustive optimum
 on the holdout suite and exits non-zero if exhaustive is ever beaten
-(Phi > 1 is a sweep/objective bug, not a better methodology).  With
+(Phi > 1 is a sweep/objective bug, not a better methodology).
+``--policies latency,energy,edp`` re-scores every method per tuning
+policy (see docs/tuning.md, "Multi-objective tuning & policies"); Phi > 1
+in ANY (method, policy) cell fails the same way.  With
 ``--device-matrix`` the comparison runs once per hardware profile
 (default tpu_v5e,gpu_sm,cpu_interpret — see docs/hardware.md) sharing one
 journal directory, so ``strategy="transfer"`` on later devices warm-starts
@@ -251,6 +254,10 @@ def compare_methods_main(argv: List[str]) -> int:
                          "(default: tpu_v5e,gpu_sm,cpu_interpret; order "
                          "matters — earlier devices' journals seed "
                          "strategy='transfer' on later ones)")
+    ap.add_argument("--policies", default="latency",
+                    help="comma list of tuning policies to score per method "
+                         "(latency, energy, edp, memory_cap[:bytes]); any "
+                         "(method, policy) Phi > 1 fails")
     args = ap.parse_args(argv)
 
     import os
@@ -286,7 +293,8 @@ def compare_methods_main(argv: List[str]) -> int:
               f"{len(profiles)} profiles ...", flush=True)
         matrix = compare_methods_matrix(
             workloads, methods, profiles, seed=args.seed,
-            max_evals=args.max_evals, journal_dir=journal_dir)
+            max_evals=args.max_evals, journal_dir=journal_dir,
+            policies=tuple(p for p in args.policies.split(",") if p))
         matrix["suite"] = {"split": args.split, "seed": args.seed,
                            "noise": args.noise, "max_evals": args.max_evals}
         print(format_matrix(matrix))
@@ -305,7 +313,8 @@ def compare_methods_main(argv: List[str]) -> int:
         workloads, methods,
         objective_factory=lambda: TPUCostModelObjective(noise=args.noise),
         seed=args.seed, max_evals=args.max_evals,
-        journal_dir=args.journal_dir)
+        journal_dir=args.journal_dir,
+        policies=tuple(p for p in args.policies.split(",") if p))
     report["suite"] = {"split": args.split, "seed": args.seed,
                        "noise": args.noise, "max_evals": args.max_evals}
     print(format_report(report))
@@ -401,12 +410,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--method", default="bayesian", choices=list(strategies()))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="latency",
+                    help="tuning policy: latency (default), energy, edp, or "
+                         "memory_cap[:bytes] — see docs/tuning.md")
     ap.add_argument("--db", default=None,
                     help="path to the tuning DB (default: the session DB)")
     ap.add_argument("--paper-suite", action="store_true")
     args = ap.parse_args(argv)
 
-    session = TunerSession(db_path=args.db) if args.db else default_session()
+    session = TunerSession(db_path=args.db, policy=args.policy) if args.db \
+        else default_session()
     if args.paper_suite:
         tune_suite(args.method, session=session)
         return 0
@@ -415,9 +428,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         wl = Workload(op=args.op, n=n,
                       batch=args.batch or max(TOTAL_ELEMS // n, 1),
                       variant=args.variant)
-        res = session.tune(wl, method=args.method, seed=args.seed)
+        res = session.tune(wl, method=args.method, seed=args.seed,
+                           policy=args.policy)
+        if args.policy == "latency":
+            score = f"t={res.best_time*1e6:.1f}us"
+        else:   # best_time is the policy scalar, not seconds
+            score = f"{args.policy}={res.best_time:.6g}"
         print(f"[tune] {wl.key}: {res.best_config} "
-              f"t={res.best_time*1e6:.1f}us evals={res.evaluations}")
+              f"{score} evals={res.evaluations}")
     return 0
 
 

@@ -21,6 +21,8 @@ from __future__ import annotations
 from typing import Mapping, Optional
 
 from repro.core.bayesian import TuneResult
+from repro.core.policy import (Policy, PolicyObjective, get_policy,
+                               pareto_front, policies, policy_scalar_cols)
 from repro.core.space import (Config, Workload, build_space, fit_block,
                               normalize_config)
 from repro.tuning.db import DEFAULT_DB_PATH, SCHEMA_VERSION, TuningDB
@@ -69,14 +71,16 @@ def suggest(wl: Workload) -> Config:
 
 
 __all__ = [
-    "Config", "DEFAULT_DB_PATH", "KernelSpec", "OnlineTuner",
+    "Config", "DEFAULT_DB_PATH", "KernelSpec", "OnlineTuner", "Policy",
+    "PolicyObjective",
     "OnlineWallClockObjective", "ReplayTrace", "SCHEMA_VERSION", "StepTimer",
     "SweepJournal", "SweepResult", "TraceRecorder", "TuneResult",
     "TunerSession", "TuningDB", "Workload", "active_overrides", "attach",
     "build_space", "config_key", "default_session", "fit_block", "get_kernel",
-    "get_strategy", "journal_path", "normalize_config",
+    "get_policy", "get_strategy", "journal_path", "normalize_config",
     "normalizer_for", "on_cpu", "online_search", "overrides",
-    "overrides_active", "plan_execution", "prune_candidates",
+    "overrides_active", "pareto_front", "plan_execution", "policies",
+    "policy_scalar_cols", "prune_candidates",
     "register_strategy", "registered_kernels", "replay",
     "replay_candidates", "resolve", "run_sweep", "set_default_session",
     "strategies", "suggest", "tune", "tuned_kernel",

@@ -1,39 +1,51 @@
 """Versioned, thread-safe JSON config store (the offline -> online handoff).
 
-Schema 3 wraps the entries in an envelope and stamps every entry with the
-hardware profile it was tuned for:
+Schema 4 stamps every entry with its metric vector and the policy it was
+tuned under:
 
-    {"schema": 3,
+    {"schema": 4,
      "entries": {"<platform>|<workload-key>": {"config": {...},
                                                "time_s": ..., "method": ...,
                                                "evaluations": ...,
-                                               "profile": "<profile-name>"}}}
+                                               "profile": "<profile-name>",
+                                               "policy": "latency",
+                                               "metrics": {"time_s": ...,
+                                                           "energy_j": ...}}}}
 
 The platform prefix in the key namespaces devices; the per-entry
 ``profile`` field makes the device explicit and lets ``lookup`` refuse an
 entry whose profile disagrees with the session's (a config tuned for one
 device must never silently resolve under another — see docs/hardware.md).
+Non-latency winners key under ``<platform>|policy=<key>|<workload-key>``
+— latency keys are unchanged from schema 3, so every existing entry keeps
+resolving, and an energy-tuned config never answers a latency lookup (or
+vice versa).  ``lookup`` double-checks the per-entry ``policy`` stamp.
 
 Legacy files migrate transparently: schema-1 files were a flat
 ``{key: entry}`` mapping; schema-2 entries lack the ``profile`` field and
-are defaulted to their key's platform prefix. A key with no platform
-prefix at all is re-keyed under ``tpu_v5e`` — every pre-profile entry was
-tuned on the v5e model, and without the rewrite such entries could never
-resolve (``lookup`` always prefixes the session platform). The next
-``store`` persists the new envelope. Unknown top-level envelope keys
-(annotations from other tools, future-schema side-channels) are preserved
-across load/flush rather than dropped. Writes are atomic (tmp file +
-``os.replace``) and serialized by a lock, so concurrent ``store`` calls
-from threads never corrupt the file.
+are defaulted to their key's platform prefix; schema-3 entries lack
+``policy``/``metrics`` and load as latency winners with a ``time_s``-only
+metric vector. A key with no platform prefix at all is re-keyed under
+``tpu_v5e`` — every pre-profile entry was tuned on the v5e model, and
+without the rewrite such entries could never resolve (``lookup`` always
+prefixes the session platform). The next ``store`` persists the new
+envelope. Unknown top-level envelope keys (annotations from other tools,
+future-schema side-channels) are preserved across load/flush rather than
+dropped. Writes are atomic (tmp file + ``os.replace``) and serialized by
+a lock, so concurrent ``store`` calls from threads never corrupt the
+file.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
-from typing import Dict, Optional
+from typing import Dict, Mapping, Optional
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
+
+# the only policy that existed before schema 4; also the keyless default
+DEFAULT_POLICY = "latency"
 
 # every entry written before the profile field existed was tuned against
 # the v5e machine model
@@ -45,11 +57,20 @@ DEFAULT_DB_PATH = os.environ.get(
 
 
 def _migrate_entry(key: str, entry: Dict) -> Dict:
-    """Schema <=2 -> 3: stamp the profile the entry was tuned under."""
-    if not isinstance(entry, dict) or "profile" in entry:
+    """Schema <=3 -> 4: stamp profile, policy, and the metric vector.
+
+    Pre-vector entries were all tuned for latency; their scalar ``time_s``
+    becomes a ``time_s``-only metric vector.
+    """
+    if not isinstance(entry, dict):
         return entry
     out = dict(entry)
-    out["profile"] = key.split("|", 1)[0] if "|" in key else LEGACY_PROFILE
+    if "profile" not in out:
+        out["profile"] = key.split("|", 1)[0] if "|" in key else LEGACY_PROFILE
+    if "policy" not in out:
+        out["policy"] = DEFAULT_POLICY
+    if not isinstance(out.get("metrics"), dict):
+        out["metrics"] = {"time_s": out.get("time_s")}
     return out
 
 
@@ -116,29 +137,43 @@ class TuningDB:
 
     # -- access --------------------------------------------------------------
 
-    def _key(self, wl) -> str:
-        return f"{self.platform}|{wl.key}"
+    def _key(self, wl, policy: Optional[str] = None) -> str:
+        # latency keys keep the schema-3 shape so pre-policy entries resolve
+        pol = policy or DEFAULT_POLICY
+        if pol == DEFAULT_POLICY:
+            return f"{self.platform}|{wl.key}"
+        return f"{self.platform}|policy={pol}|{wl.key}"
 
-    def lookup(self, wl) -> Optional[Dict]:
+    def lookup(self, wl, policy: Optional[str] = None) -> Optional[Dict]:
+        pol = policy or DEFAULT_POLICY
         with self._lock:
             self._load()
-            entry = self._data.get(self._key(wl))
+            entry = self._data.get(self._key(wl, pol))
             if not entry:
                 return None
             # defense in depth on top of the key prefix: an entry stamped
             # for another device never resolves here (e.g. a file edited by
-            # hand, or a legacy entry migrated under a foreign prefix)
+            # hand, or a legacy entry migrated under a foreign prefix) —
+            # and same for the policy stamp
             if entry.get("profile", self.platform) != self.platform:
+                return None
+            if entry.get("policy", DEFAULT_POLICY) != pol:
                 return None
             return dict(entry["config"])
 
     def store(self, wl, cfg: Dict, time_s: float, method: str,
-              evaluations: int = 0) -> None:
+              evaluations: int = 0, *,
+              metrics: Optional[Mapping[str, float]] = None,
+              policy: Optional[str] = None) -> None:
+        pol = policy or DEFAULT_POLICY
+        vec = {k: float(v) for k, v in (metrics or {}).items()}
+        vec.setdefault("time_s", float(time_s))
         with self._lock:
             self._load()
-            self._data[self._key(wl)] = {
+            self._data[self._key(wl, pol)] = {
                 "config": dict(cfg), "time_s": time_s, "method": method,
                 "evaluations": evaluations, "profile": self.platform,
+                "policy": pol, "metrics": vec,
             }
             self._flush_locked()
 

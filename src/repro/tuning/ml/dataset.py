@@ -160,16 +160,24 @@ class _Builder:
 # ---------------------------------------------------------------------------
 
 def sweep_workload(wl: Workload, objective: Optional[Objective] = None,
-                   journal_dir: Optional[str] = None
+                   journal_dir: Optional[str] = None,
+                   policy: Optional[str] = None
                    ) -> Tuple[List[Config], np.ndarray, np.ndarray]:
     """Exhaustively evaluate ``wl``'s valid space on the offline objective.
 
-    Returns (configs, feature rows, times). This is the dense ground truth:
-    identical to what ``ExhaustiveSearch`` visits, kept as arrays instead
-    of a ``TuneResult`` so every (config, time) pair becomes a training row
-    rather than just the winner.  Runs on the vectorized sweep engine;
-    with ``journal_dir`` the sweep checkpoints to (and resumes from) the
-    per-(workload, objective) journal.
+    Returns (configs, feature rows, labels). This is the dense ground
+    truth: identical to what ``ExhaustiveSearch`` visits, kept as arrays
+    instead of a ``TuneResult`` so every (config, label) pair becomes a
+    training row rather than just the winner.  Runs on the vectorized
+    sweep engine; with ``journal_dir`` the sweep checkpoints to (and
+    resumes from) the per-(workload, objective) journal.
+
+    ``policy`` makes the labels metric-aware: instead of raw seconds the
+    group is labeled with that policy's scalars over the sweep's metric
+    vectors (see ``repro.core.policy``), so a forest can learn the
+    energy/EDP ranking from the same sweeps.  The journal stays keyed by
+    the raw objective — one sweep feeds every policy's dataset.  Default
+    ``None`` keeps the historical time labels bit-for-bit.
     """
     objective = objective or TPUCostModelObjective()
     wl = wl.canonical()
@@ -179,6 +187,11 @@ def sweep_workload(wl: Workload, objective: Optional[Objective] = None,
     res = run_sweep(space, objective, journal=journal)
     cfgs = [c for c, _ in res.history]
     times = np.array([t for _, t in res.history])
+    if policy is not None:
+        from repro.core.policy import get_policy, policy_scalar_cols
+        pol = get_policy(policy, getattr(space, "spec", None))
+        if pol.name != "latency" and res.metrics is not None:
+            times = policy_scalar_cols(pol, res.metrics)
     X = featurize_batch(space, cfgs)
     return cfgs, X, times
 
@@ -186,21 +199,25 @@ def sweep_workload(wl: Workload, objective: Optional[Objective] = None,
 def build_dataset(workloads: Iterable[Workload],
                   objective: Optional[Objective] = None,
                   on_sweep: Optional[Callable] = None,
-                  journal_dir: Optional[str] = None) -> Dataset:
+                  journal_dir: Optional[str] = None,
+                  policy: Optional[str] = None) -> Dataset:
     """Sweep every workload; one centered group per workload.
 
     ``on_sweep(wl, cfgs, times)`` is invoked once per workload with the
     sweep results, so callers (e.g. ``tune.py train-model --db``) can
     persist each exhaustive winner without sweeping a second time.
     ``journal_dir`` checkpoints every sweep (see ``repro.tuning.sweep``),
-    making a long dataset build resumable.
+    making a long dataset build resumable.  ``policy`` labels every group
+    with that policy's scalars instead of raw seconds (see
+    :func:`sweep_workload`).
     """
     objective = objective or TPUCostModelObjective()
     b = _Builder()
     for wl in workloads:
         wl = wl.canonical()
         cfgs, X, times = sweep_workload(wl, objective,
-                                        journal_dir=journal_dir)
+                                        journal_dir=journal_dir,
+                                        policy=policy)
         b.add_group(wl, X, times)
         if on_sweep is not None:
             on_sweep(wl, cfgs, times)
@@ -208,8 +225,13 @@ def build_dataset(workloads: Iterable[Workload],
 
 
 def dataset_from_journal(path: str,
-                         signature: Optional[str] = None) -> Dataset:
+                         signature: Optional[str] = None,
+                         policy: Optional[str] = None) -> Dataset:
     """One journal file -> one labeled group (no re-evaluation).
+
+    ``policy`` labels the group with that policy's scalars over the
+    journal's metric vectors (version-3 journals record them; pre-vector
+    entries fall back to their time — see ``repro.core.policy``).
 
     The journal header carries the workload; every completed entry whose
     config is still valid in the current space becomes a training row.
@@ -251,32 +273,46 @@ def dataset_from_journal(path: str,
     # config a different feature vector
     all_cfgs = space.enumerate_valid()
     index = {config_key(c): i for i, c in enumerate(all_cfgs)}
+    labels = [t for _, t in raw_entries]
+    if policy is not None:
+        from repro.core.policy import get_policy, policy_scalar_cols
+        pol = get_policy(policy, getattr(space, "spec", None))
+        if pol.name != "latency":
+            # metric_entries dedups exactly like entries, so the vectors
+            # are positionally parallel to raw_entries
+            vecs = [v for _, v in journal.metric_entries()]
+            axes = sorted({k for v in vecs for k in v})
+            cols = {a: np.array([v.get(a, np.nan) for v in vecs])
+                    for a in axes}
+            labels = list(policy_scalar_cols(pol, cols))
     rows, times = [], []
-    for cfg, t in raw_entries:
+    for j, (cfg, _) in enumerate(raw_entries):
         i = index.get(config_key(cfg))
         if i is not None:              # skips configs no longer enumerated
             rows.append(i)
-            times.append(t)
+            times.append(labels[j])
     if rows:
         b.add_group(wl, featurize_batch(space, all_cfgs)[rows], times)
     return b.build()
 
 
 def dataset_from_journal_dir(journal_dir: str,
-                             objective: Optional[Objective] = None
-                             ) -> Dataset:
+                             objective: Optional[Objective] = None,
+                             policy: Optional[str] = None) -> Dataset:
     """Every ``*.jsonl`` sweep journal under ``journal_dir``, merged.
 
     Pass the ``objective`` the sweeps were measured with to load only its
     journals — a directory that accumulated sweeps under several
     objectives (different noise, different cost models) would otherwise
     contribute duplicate groups of one workload with inconsistent times.
+    ``policy`` forwards to :func:`dataset_from_journal` (metric-aware
+    labels).
     """
     import glob
     import os
     signature = objective.signature() if objective is not None else None
-    parts = [dataset_from_journal(p, signature=signature) for p in
-             sorted(glob.glob(os.path.join(journal_dir, "*.jsonl")))]
+    parts = [dataset_from_journal(p, signature=signature, policy=policy)
+             for p in sorted(glob.glob(os.path.join(journal_dir, "*.jsonl")))]
     return merge(*parts) if parts else _Builder().build()
 
 

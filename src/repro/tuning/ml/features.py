@@ -48,7 +48,7 @@ FEATURE_NAMES = (
     "log2_block_bytes", "steps_per_pass", "vmem_fits",
     "log2_seq_tiles", "ragged_tail",
     "tier", "radix_rank", "block_rank", "ilp_rank",
-    # machine-model response curves (hw.tpu): the expert model's own
+    # machine-model response curves (hw.profiles): the expert model's own
     # efficiency terms, so the forest corrects them instead of re-learning
     "dma_eff", "ilp_eff", "lane_util", "sublane_util",
     "log2_total_bytes", "log2_t_mem_proxy", "log2_steps_total",
@@ -105,7 +105,7 @@ def _encode(space: SearchSpace, cfg: Mapping[str, int]):
     model's response curves evaluated AT the plan's operating point.
     """
     wl = space.workload
-    plan = plan_for(wl, cfg, spec=space.spec)
+    plan = plan_for(wl, cfg, profile=space.spec)
     res = plan.resources()
     sc = score(space, dict(cfg), res=res)
 

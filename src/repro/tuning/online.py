@@ -16,7 +16,13 @@ steps instead of a dedicated sweep.  This module is the online half:
     ever spent on non-incumbent configs, and a **guard band** bounds how
     bad a trial may look before it is rolled back: a trial whose EWMA
     exceeds ``incumbent * (1 + guard_band)`` is abandoned the moment it has
-    enough samples to be believed.
+    enough samples to be believed.  The guard band generalizes to a
+    **power envelope** (``power_envelope=``): a candidate whose
+    *model-predicted* average draw (``energy_j / time_s`` from the cost
+    model's metric vector — see :mod:`repro.core.policy`) exceeds the
+    incumbent's modeled draw times the envelope is vetoed before it ever
+    serves a production step.  Off by default; latency behavior is
+    unchanged when disabled.
   * Winners are **promoted**: persisted to the TuningDB (``method="online"``
     — deliberately outside the ``dataset_from_db`` exhaustive allowlist,
     a traffic winner is not a guaranteed optimum) and journaled to the
@@ -328,6 +334,7 @@ class OnlineTuner:
                  prior: Optional[Config] = None,
                  candidates: Optional[Sequence[Config]] = None,
                  budget: int = 64, guard_band: float = 0.25,
+                 power_envelope: Optional[float] = None,
                  min_samples: int = 3, samples_per_trial: int = 8,
                  alpha: float = 0.25, clip: float = 4.0, top_k: int = 8,
                  cooldown: int = 1, journal_dir: Optional[str] = None,
@@ -336,6 +343,9 @@ class OnlineTuner:
             raise ValueError(f"budget must be >= 1, got {budget}")
         if guard_band <= 0:
             raise ValueError(f"guard_band must be > 0, got {guard_band}")
+        if power_envelope is not None and power_envelope <= 0:
+            raise ValueError(
+                f"power_envelope must be > 0, got {power_envelope}")
         if samples_per_trial < min_samples:
             raise ValueError("samples_per_trial must be >= min_samples "
                              f"({samples_per_trial} < {min_samples})")
@@ -348,6 +358,10 @@ class OnlineTuner:
         if prior is None:
             prior = session.resolve_raw(self.wl)
         self.guard_band = guard_band
+        self.power_envelope = power_envelope
+        self.power_vetoed: List[Config] = []
+        self._watts_cache: Dict[str, float] = {}
+        self._power_obj = None
         self.budget = budget
         self.min_samples = max(int(min_samples), 1)
         self.samples_per_trial = samples_per_trial
@@ -454,6 +468,17 @@ class OnlineTuner:
             self._stop("exhausted")
             return
         cfg = self._pending.pop(0)
+        if self.power_envelope is not None:
+            # the trial queue never spends a production step on a config the
+            # model says would blow the incumbent's power budget
+            cap = self._modeled_watts(self.incumbent.config) \
+                * self.power_envelope
+            while self._modeled_watts(cfg) > cap:
+                self.power_vetoed.append(cfg)
+                if not self._pending:
+                    self._stop("exhausted")
+                    return
+                cfg = self._pending.pop(0)
         self.trial = TrialRecord(cfg, EwmaTracker(
             hint=self.incumbent.tracker.value, **self._ewma_kwargs))
 
@@ -482,6 +507,23 @@ class OnlineTuner:
             self._stop("budget")
         elif not self._pending:
             self._stop("exhausted")
+
+    def _modeled_watts(self, cfg: Config) -> float:
+        """Model-predicted average draw (W) for ``cfg`` on the active device:
+        ``energy_j / time_s`` from the cost model's metric vector.  Zero
+        production cost — the power veto never spends a traffic step.  A
+        config the model cannot time answers with +inf (always vetoed)."""
+        key = config_key(cfg)
+        if key not in self._watts_cache:
+            if self._power_obj is None:
+                from repro.core.objective import CostModelObjective
+                profile = getattr(self.session, "spec", None)
+                self._power_obj = CostModelObjective(profile)
+            m = self._power_obj(self.space, cfg)
+            watts = m.energy_j / m.time_s if m.valid and m.time_s > 0 \
+                else float("inf")
+            self._watts_cache[key] = watts
+        return self._watts_cache[key]
 
     def _stop(self, reason: str) -> None:
         if not self.finished:
@@ -541,6 +583,8 @@ class OnlineTuner:
             "measured": self.measured,
             "budget": self.budget,
             "promotions": self.promotions,
+            "power_envelope": self.power_envelope,
+            "power_vetoed": len(self.power_vetoed),
             "trials": [{"config": dict(t.config), "state": t.state,
                         "samples": t.samples, "ewma_s": t.ewma}
                        for t in self.trials],
@@ -603,7 +647,9 @@ def online_search(space: SearchSpace, objective: Objective, *, seed: int = 0,
                   budget: int = 16, guard_band: float = 0.25,
                   min_samples: int = 2, samples_per_trial: int = 3,
                   top_k: Optional[int] = None,
-                  prior: Optional[Config] = None) -> TuneResult:
+                  prior: Optional[Config] = None,
+                  policy=None,
+                  power_envelope: Optional[float] = None) -> TuneResult:
     """``strategy="online"`` — simulate in-traffic tuning on an objective.
 
     Every simulated step "measures" the active config by evaluating the
@@ -611,9 +657,21 @@ def online_search(space: SearchSpace, objective: Objective, *, seed: int = 0,
     measured time, so the comparison report scores online tuning on the
     same numbers as everyone else).  The prior is the analytical
     suggestion — the paper's zero-evaluation cold start.
+
+    ``policy`` scalarizes the objective's metric vector before the EWMA
+    sees it (so e.g. ``policy="energy"`` makes trials compete on modeled
+    joules); the session passes an already-wrapped
+    :class:`~repro.core.policy.PolicyObjective`, so this parameter is for
+    direct callers.  ``power_envelope`` forwards to :class:`OnlineTuner`.
     """
     del seed    # the trial queue is analytically ranked: deterministic
     wl = space.workload
+    if policy is not None:
+        from repro.core.policy import PolicyObjective, get_policy
+        pol = get_policy(policy)
+        if pol.name != "latency" and not isinstance(objective,
+                                                    PolicyObjective):
+            objective = PolicyObjective(objective, pol)
     if prior is None:
         prior = AnalyticalTuner().suggest(space)
     if top_k is None:
@@ -621,6 +679,7 @@ def online_search(space: SearchSpace, objective: Objective, *, seed: int = 0,
         top_k = max(budget // samples_per_trial, 1)
     tuner = OnlineTuner(wl, session=None, prior=prior, store=False,
                         budget=budget, guard_band=guard_band,
+                        power_envelope=power_envelope,
                         min_samples=min_samples,
                         samples_per_trial=samples_per_trial, top_k=top_k,
                         cooldown=0)

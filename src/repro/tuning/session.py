@@ -4,6 +4,9 @@ One object owns everything the paper's deployment story needs:
 
   * the persistent :class:`~repro.tuning.db.TuningDB` (offline winners),
   * the platform spec,
+  * the resolution :class:`~repro.core.policy.Policy` (latency / energy /
+    edp / memory_cap) — which metric axis resolve/tune optimize; winners
+    are keyed per policy in the DB,
   * the search-strategy registry (bayesian / exhaustive / random /
     analytical — extensible via :func:`register_strategy`),
   * an in-memory LRU of fully resolved (normalized) configs, so the online
@@ -28,12 +31,13 @@ from __future__ import annotations
 import inspect
 import threading
 from collections import OrderedDict
-from typing import Callable, Dict, Mapping, Optional, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 from repro.core.analytical import AnalyticalTuner
 from repro.core.bayesian import BayesianTuner, TuneResult
 from repro.core.exhaustive import ExhaustiveSearch, RandomSearch
 from repro.core.objective import CachedObjective, CostModelObjective, Objective
+from repro.core.policy import Policy, PolicyObjective, get_policy
 from repro.core.space import Config, Workload, build_space
 from repro.hw.profiles import HardwareProfile, active_profile, get_profile
 from repro.tuning.db import TuningDB
@@ -58,9 +62,10 @@ def _bayesian(space, objective, *, seed: int = 0, max_evals: int = 64,
 
 
 def _exhaustive(space, objective, *, seed: int = 0, max_evals: int = 0,
-                journal_dir=None, prune=None, top_k=None) -> TuneResult:
+                journal_dir=None, prune=None, top_k=None,
+                policy=None) -> TuneResult:
     return ExhaustiveSearch(journal_dir=journal_dir, prune=prune,
-                            top_k=top_k).tune(space, objective)
+                            top_k=top_k, policy=policy).tune(space, objective)
 
 
 def _random(space, objective, *, seed: int = 0, max_evals: int = 64,
@@ -147,7 +152,8 @@ class TunerSession:
     def __init__(self, db: Optional[TuningDB] = None, *,
                  db_path: Optional[str] = None, platform: Optional[str] = None,
                  spec: Optional[HardwareProfile] = None,
-                 cache_size: int = 2048, sweep_dir: Optional[str] = None):
+                 cache_size: int = 2048, sweep_dir: Optional[str] = None,
+                 policy: Union[str, Policy] = "latency"):
         # profile resolution: an explicit spec wins; else a platform naming a
         # registered profile; else the process-wide active profile. The DB
         # platform defaults to the profile name, so entries tuned for one
@@ -161,6 +167,10 @@ class TunerSession:
                 # DB namespaces) keys the DB but models as the active device
                 spec = active_profile()
         self.spec = spec
+        # the session's resolution policy: which axis of the metric vector
+        # resolve()/tune() optimize by default (see repro.core.policy);
+        # "latency" reproduces the scalar-era behavior exactly
+        self.policy = get_policy(policy, spec)
         if platform is None:
             platform = spec.name
         self.db = db if db is not None else TuningDB(path=db_path,
@@ -182,7 +192,7 @@ class TunerSession:
         """Launch-ready config for ``wl``: resolved, overridden, normalized."""
         wl = wl.canonical()
         ov = active_overrides(wl.op)
-        cache_key = (wl.key, _dims_token(dims))
+        cache_key = (wl.key, _dims_token(dims), self.policy.key)
         if config is None and ov is None:
             with self._lock:
                 cached = self._resolved.get(cache_key)
@@ -204,9 +214,10 @@ class TunerSession:
         return resolved
 
     def resolve_raw(self, wl: Workload) -> Config:
-        """Pre-normalization config: DB hit, else memoized analytical."""
+        """Pre-normalization config: DB hit (under the session policy),
+        else memoized analytical."""
         wl = wl.canonical()
-        cfg = self.db.lookup(wl)
+        cfg = self.db.lookup(wl, policy=self.policy.key)
         if cfg is not None:
             return cfg
         return dict(self.suggest(wl))
@@ -218,40 +229,54 @@ class TunerSession:
             cached = self._suggested.get(wl.key)
         if cached is not None:
             return dict(cached)
-        cfg = self._analytical.suggest(build_space(wl, spec=self.spec))
+        cfg = self._analytical.suggest(build_space(wl, self.spec))
         with self._lock:
             self._suggested.setdefault(wl.key, dict(cfg))
         return cfg
 
-    def lookup(self, wl: Workload) -> Optional[Config]:
-        return self.db.lookup(wl.canonical())
+    def lookup(self, wl: Workload,
+               policy: Union[str, Policy, None] = None) -> Optional[Config]:
+        pol = self.policy if policy is None else get_policy(policy, self.spec)
+        return self.db.lookup(wl.canonical(), policy=pol.key)
 
     # -- offline path --------------------------------------------------------
 
     def tune(self, wl: Workload, method: str = "bayesian",
              objective: Optional[Objective] = None, *, seed: int = 0,
              max_evals: int = 64, store: bool = True,
-             prune: Optional[str] = None,
-             top_k: Optional[int] = None) -> TuneResult:
+             prune: Optional[str] = None, top_k: Optional[int] = None,
+             policy: Union[str, Policy, None] = None) -> TuneResult:
         """Run an offline search; persist the winner; invalidate the caches.
 
         Exhaustive searches journal to ``self.sweep_dir`` (when set), so
         interrupted sweeps resume, and honour ``prune``/``top_k``
         (analytical-dominance pruning); other strategies ignore both.
+
+        ``policy`` (default: the session's) decides what the search
+        minimizes.  Exhaustive sweeps stay keyed by the raw objective and
+        pick the winner from the Pareto front — one journal serves every
+        policy; every other strategy searches through a
+        :class:`~repro.core.policy.PolicyObjective` wrapper.  Winners are
+        stored under policy-namespaced DB keys (latency keys unchanged).
         """
         wl = wl.canonical()
+        pol = self.policy if policy is None else get_policy(policy, self.spec)
         strategy = get_strategy(method)
-        space = build_space(wl, spec=self.spec)
+        space = build_space(wl, self.spec)
         cached = CachedObjective(objective or CostModelObjective(self.spec))
+        search_obj: Objective = cached
+        if pol.name != "latency" and method != "exhaustive":
+            search_obj = PolicyObjective(cached, pol)
         extra = {"journal_dir": self.sweep_dir, "prune": prune,
-                 "top_k": top_k}
+                 "top_k": top_k,
+                 "policy": pol if pol.name != "latency" else None}
         try:     # strategies registered before the sweep kwargs existed
             params = inspect.signature(strategy).parameters
             if not any(p.kind is p.VAR_KEYWORD for p in params.values()):
                 extra = {k: v for k, v in extra.items() if k in params}
         except (TypeError, ValueError):
             pass
-        result = strategy(space, cached, seed=seed, max_evals=max_evals,
+        result = strategy(space, search_obj, seed=seed, max_evals=max_evals,
                           **extra)
         if store:
             # a pruned sweep's winner is NOT a guaranteed optimum; don't
@@ -259,8 +284,16 @@ class TunerSession:
             # label-0.0 ("this is the group best") training rows
             stored_method = f"{method}-pruned" \
                 if result.stopped_by == "pruned" else method
-            self.db.store(wl, result.best_config, result.best_time,
-                          stored_method, result.evaluations)
+            # the winner's metric vector (a cache hit for any measured
+            # winner). Under a non-latency policy result.best_time is the
+            # policy scalar — the DB's time_s must stay real seconds.
+            m = cached(space, result.best_config)
+            time_s = result.best_time if pol.name == "latency" \
+                else (m.time_s if m.valid else result.best_time)
+            self.db.store(wl, result.best_config, time_s,
+                          stored_method, result.evaluations,
+                          metrics=dict(m.metrics) if m.valid else None,
+                          policy=pol.key)
             self.invalidate(wl)
         return result
 

@@ -11,10 +11,16 @@ replaces the seed's serial per-config Python loop with:
   * **a resumable journal** — one JSONL file per (workload, objective)
     with atomic line appends, so a long wall-clock sweep survives
     interruption and a re-run only evaluates what is missing;
+  * **metric-vector journaling + Pareto fronts** — entries record the full
+    metric vector (time/energy/peak-VMEM), the sweep maintains the
+    non-dominated set per (workload, objective), and a :class:`Policy`
+    picks the winner from the front — one sweep serves every policy;
   * **analytical-dominance pruning** — ``prune="analytical"`` keeps the
     top-k candidates ranked by the zero-evaluation expert model (the
     model-steered pruning lever of Schoonhoven et al.), recording how many
-    candidates were dropped.
+    candidates were dropped.  Pruning is latency-ranked, so combining it
+    with a non-latency policy raises rather than silently searching the
+    wrong subset.
 
 ``run_sweep`` is what ``ExhaustiveSearch.tune`` (and therefore
 ``strategy="exhaustive"``) executes; ``repro.tuning.ml.dataset`` consumes
@@ -26,19 +32,22 @@ import dataclasses
 import json
 import os
 import re
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.bayesian import TuneResult
-from repro.core.objective import Objective
+from repro.core.objective import METRIC_TIME, Objective
+from repro.core.policy import (Policy, get_policy, pareto_front,
+                               policy_scalar_cols)
 from repro.core.space import Config, SearchSpace, Workload
 
-# v2 adds the hardware-profile name to the header; v1 journals (pre-profile,
-# all measured on the tpu_v5e model) stay readable — the objective-signature
-# check already rejects cross-profile resumption, since the profile name is
+# v3 adds the per-entry metric vector ("m": {metric: value}); v2 added the
+# hardware-profile name to the header. Older journals stay readable — their
+# entries load as time_s-only vectors, and the objective-signature check
+# already rejects cross-profile resumption, since the profile name is
 # embedded in every cost-model signature.
-JOURNAL_VERSION = 2
+JOURNAL_VERSION = 3
 
 # default kept-set size for prune="analytical"; expensive objectives can
 # pass an explicit top_k
@@ -89,9 +98,22 @@ class SweepJournal:
         raises — silently resuming someone else's numbers would corrupt
         the optimum.
         """
+        return {k: vec[METRIC_TIME]
+                for k, vec in self.load_metrics(wl, objective).items()}
+
+    def load_metrics(self, wl: Optional[Workload] = None,
+                     objective: Optional[Objective] = None
+                     ) -> Dict[str, Dict[str, float]]:
+        """Completed {config_key: metric vector}; {} when absent.
+
+        Version-3 entries carry their vector in ``"m"``; older entries
+        (and v3 entries from time-only objectives) load as
+        ``{"time_s": t}`` — the documented migration for pre-vector
+        journals.  Header validation matches ``load``.
+        """
         if not os.path.exists(self.path):
             return {}
-        done: Dict[str, float] = {}
+        done: Dict[str, Dict[str, float]] = {}
         header_ok = False
         with open(self.path, "r") as f:
             for i, line in enumerate(f):
@@ -109,7 +131,10 @@ class SweepJournal:
                     header_ok = True
                     continue
                 if "k" in rec and "t" in rec:
-                    done[rec["k"]] = float(rec["t"])
+                    vec = {n: float(v) for n, v in rec["m"].items()} \
+                        if isinstance(rec.get("m"), dict) else {}
+                    vec[METRIC_TIME] = float(rec["t"])
+                    done[rec["k"]] = vec
         if not header_ok and (wl is not None or objective is not None):
             # a torn/missing header means the entries cannot be validated
             # against this (workload, objective) — never resume them.
@@ -139,10 +164,18 @@ class SweepJournal:
         concurrent writers that both loaded before either appended can
         legally write the same config twice.
         """
+        return [(cfg, vec[METRIC_TIME]) for cfg, vec in self.metric_entries()]
+
+    def metric_entries(self) -> List[Tuple[Config, Dict[str, float]]]:
+        """Completed (config, metric-vector) pairs, first-completion order.
+
+        Same dedup semantics as ``entries``; pre-v3 entries come back as
+        ``time_s``-only vectors.
+        """
         if not os.path.exists(self.path):
             return []
         seen: Dict[str, int] = {}
-        out: List[Tuple[Config, float]] = []
+        out: List[Tuple[Config, Dict[str, float]]] = []
         with open(self.path, "r") as f:
             for line in f:
                 line = line.strip()
@@ -157,7 +190,10 @@ class SweepJournal:
                     continue
                 cfg = {k: int(v) for k, v in rec["cfg"].items()}
                 key = config_key(cfg)
-                pair = (cfg, float(rec["t"]))
+                vec = {n: float(v) for n, v in rec["m"].items()} \
+                    if isinstance(rec.get("m"), dict) else {}
+                vec[METRIC_TIME] = float(rec["t"])
+                pair = (cfg, vec)
                 if key in seen:
                     out[seen[key]] = pair
                 else:
@@ -218,13 +254,22 @@ class SweepJournal:
         self._append_lines([json.dumps(header, sort_keys=True)])
 
     def append(self, wl: Workload, objective: Objective, space_size: int,
-               entries: Sequence[Tuple[Config, float]],
+               entries: Sequence[Tuple],
                pruned: int = 0) -> None:
+        """Append completed evaluations: ``(config, time)`` pairs, or
+        ``(config, time, metric_vector)`` triples (the vector is written as
+        ``"m"`` minus the redundant ``time_s`` mirror)."""
         self._ensure_header(wl, objective, space_size, pruned)
-        self._append_lines(
-            json.dumps({"k": config_key(cfg), "cfg": cfg, "t": float(t)},
-                       sort_keys=True)
-            for cfg, t in entries)
+        self._append_lines(self._entry_line(*entry) for entry in entries)
+
+    @staticmethod
+    def _entry_line(cfg: Config, t: float, metrics=None) -> str:
+        rec = {"k": config_key(cfg), "cfg": cfg, "t": float(t)}
+        vec = {n: float(v) for n, v in (metrics or {}).items()
+               if n != METRIC_TIME}
+        if vec:
+            rec["m"] = vec
+        return json.dumps(rec, sort_keys=True)
 
     def _append_lines(self, lines) -> None:
         payload = "".join(line + "\n" for line in lines).encode()
@@ -281,7 +326,7 @@ def prune_candidates(space: SearchSpace, cands: List[Config],
 @dataclasses.dataclass
 class SweepResult:
     best_config: Config
-    best_time: float
+    best_time: float                     # winner's measured seconds
     evaluations: int                     # fresh objective evaluations
     resumed: int                         # configs answered by the journal
     pruned: int                          # candidates dropped before measuring
@@ -289,8 +334,21 @@ class SweepResult:
     history: List[Tuple[Config, float]]  # enumeration order, penalty-clamped
     stopped_by: str                      # "exhausted" | "pruned"
     journal: Optional[str] = None        # journal path, when journaled
+    metrics: Optional[Dict[str, np.ndarray]] = None  # columns over history
+    pareto: Tuple = ()                   # non-dominated (config, vector)s
+    policy: Optional[str] = None         # policy key the winner was picked by
+    best_scalar: Optional[float] = None  # winner's policy scalar
 
     def as_tune_result(self) -> TuneResult:
+        # under a policy, the quantity the search minimized (and therefore
+        # reports as best/history values) is the policy scalar
+        if self.policy is not None and self.metrics is not None:
+            pol = get_policy(self.policy)
+            scal = policy_scalar_cols(pol, self.metrics)
+            history = list(zip((c for c, _ in self.history), scal.tolist()))
+            return TuneResult(self.best_config, float(self.best_scalar),
+                              self.evaluations + self.resumed, history,
+                              self.stopped_by)
         return TuneResult(self.best_config, self.best_time,
                           self.evaluations + self.resumed, self.history,
                           self.stopped_by)
@@ -299,15 +357,33 @@ class SweepResult:
 def run_sweep(space: SearchSpace, objective: Objective, *,
               journal: Optional[SweepJournal] = None,
               prune: Optional[str] = None, top_k: Optional[int] = None,
-              chunk: int = 1024) -> SweepResult:
+              chunk: int = 1024,
+              policy: Union[str, Policy, None] = None) -> SweepResult:
     """Evaluate the (optionally pruned) valid space; resume from ``journal``.
 
     Evaluation happens in ``chunk``-sized batches through
-    ``objective.batch_eval``; each completed chunk is journaled before the
-    next starts, so an interrupted sweep re-run skips everything already
-    measured and still returns the identical winner.
+    ``objective.batch_eval_metrics``; each completed chunk is journaled
+    (full metric vectors) before the next starts, so an interrupted sweep
+    re-run skips everything already measured and still returns the
+    identical winner.  The result carries the Pareto front over the
+    objective's metric axes; ``policy`` picks the winner from it (default
+    ``latency`` — identical behavior and numbers as the scalar-era sweep).
+
+    Pruning is ranked by the latency-shaped analytical model, so it
+    composes only with policies declared ``prune_safe`` — any other
+    combination raises instead of optimizing the wrong subset.
     """
     wl = space.workload
+    pol = None
+    if policy is not None:
+        pol = get_policy(policy, getattr(objective, "spec", None))
+        if pol.name == "latency":
+            pol = None
+    if prune is not None and pol is not None and not pol.prune_safe:
+        raise ValueError(
+            f"prune={prune!r} ranks candidates by latency and cannot vouch "
+            f"for policy {pol.key!r}; sweep unpruned and pick from the "
+            f"Pareto front instead")
     cands = space.enumerate_valid()
     if not cands:
         raise ValueError(f"empty search space for {wl.key}")
@@ -323,17 +399,23 @@ def run_sweep(space: SearchSpace, objective: Objective, *,
         cands, pruned = prune_candidates(
             space, cands, top_k if top_k is not None else DEFAULT_TOP_K)
 
-    times = np.full(len(cands), np.nan)
+    names = objective.metric_names()
+    cols = {n: np.full(len(cands), np.nan) for n in names}
+    times = cols[METRIC_TIME]
     resumed = 0
     if journal is not None:
-        done = journal.load(wl, objective)
+        done = journal.load_metrics(wl, objective)
         pending: List[int] = []
         for i, cand in enumerate(cands):
-            t = done.get(config_key(cand)) if done else None
-            if t is None:
+            vec = done.get(config_key(cand)) if done else None
+            if vec is None:
                 pending.append(i)
             else:
-                times[i] = t
+                # axes a pre-vector journal did not record stay NaN; the
+                # policy scalarization falls back to time for those rows
+                for n in names:
+                    if n in vec:
+                        cols[n][i] = vec[n]
                 resumed += 1
     else:
         pending = list(range(len(cands)))
@@ -341,15 +423,25 @@ def run_sweep(space: SearchSpace, objective: Objective, *,
     chunk = max(int(chunk), 1)
     for lo in range(0, len(pending), chunk):
         idx = pending[lo: lo + chunk]
-        ts = objective.batch_eval(space, [cands[i] for i in idx],
-                                  assume_valid=True)
-        times[idx] = ts
+        mcols = objective.batch_eval_metrics(space, [cands[i] for i in idx],
+                                             assume_valid=True)
+        for n in names:
+            cols[n][idx] = mcols[n]
         if journal is not None:
-            journal.append(wl, objective, full_size,
-                           [(cands[i], float(t)) for i, t in zip(idx, ts)],
-                           pruned=pruned)
+            journal.append(
+                wl, objective, full_size,
+                [(cands[i], float(mcols[METRIC_TIME][j]),
+                  {n: float(mcols[n][j]) for n in names})
+                 for j, i in enumerate(idx)],
+                pruned=pruned)
 
-    best_i = int(np.argmin(times))
+    if pol is not None:
+        scal = policy_scalar_cols(pol, cols)
+        best_i = int(np.argmin(scal))
+        best_scalar = float(scal[best_i])
+    else:
+        best_i = int(np.argmin(times))
+        best_scalar = None
     return SweepResult(
         best_config=cands[best_i],
         best_time=float(times[best_i]),
@@ -360,4 +452,17 @@ def run_sweep(space: SearchSpace, objective: Objective, *,
         history=list(zip(cands, times.tolist())),
         stopped_by="pruned" if pruned else "exhausted",
         journal=journal.path if journal is not None else None,
+        metrics=cols,
+        pareto=_sweep_front(cols, cands, names),
+        policy=pol.key if pol is not None else None,
+        best_scalar=best_scalar,
     )
+
+
+def _sweep_front(cols: Dict[str, np.ndarray], cands: List[Config],
+                 names: Sequence[str]) -> Tuple:
+    """Pareto front over the swept columns; rows with unrecorded axes
+    (pre-vector journal resumes) count as worst-possible on those axes."""
+    filled = {n: np.nan_to_num(cols[n], nan=np.inf) for n in names}
+    filled[METRIC_TIME] = cols[METRIC_TIME]
+    return pareto_front(filled, cands, names)

@@ -63,7 +63,7 @@ def test_fixture_signature_unchanged(monkeypatch):
                          + str(r["workload"]["n"]))
 def test_tpu_v5e_costs_bit_identical(rec):
     wl = _wl(rec)
-    space = build_space(wl, spec=TPU_V5E)
+    space = build_space(wl, TPU_V5E)
     obj = CostModelObjective(TPU_V5E, noise=rec["noise"])
     cands = space.enumerate_valid()
     assert len(cands) == rec["space_size"]
@@ -99,12 +99,11 @@ def test_active_profile_env_retargets(monkeypatch):
     assert CostModelObjective().signature().startswith("cost:gpu_sm:")
 
 
-def test_legacy_tpu_shim_still_works():
-    with pytest.deprecated_call():
-        from repro.hw.tpu import V5E
-    assert V5E is TPU_V5E
-    from repro.hw.tpu import TpuSpec
-    assert TpuSpec is HardwareProfile
+def test_legacy_tpu_shim_is_retired():
+    """repro.hw.tpu is gone: importing it fails with a pointer at
+    repro.hw.profiles (the machine model as data)."""
+    with pytest.raises(ImportError, match="repro.hw.profiles"):
+        import repro.hw.tpu  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -123,7 +122,7 @@ def _representative(op: str) -> Workload:
 def test_profile_yields_valid_space_and_finite_plans(profile_name, op):
     prof = get_profile(profile_name)
     wl = _representative(op)
-    space = build_space(wl, spec=prof)
+    space = build_space(wl, prof)
     assert space.spec is prof
     cands = space.enumerate_valid()
     assert cands, f"{op} space empty under {profile_name}"
@@ -133,7 +132,7 @@ def test_profile_yields_valid_space_and_finite_plans(profile_name, op):
     ts = obj.batch_eval(space, sample, assume_valid=True)
     assert np.all(np.isfinite(ts)) and np.all(np.asarray(ts) > 0)
     for cfg in sample[:4]:
-        plan = plan_for(wl, cfg, spec=prof)
+        plan = plan_for(wl, cfg, profile=prof)
         res = plan.resources()
         for key, val in res.items():
             assert np.isfinite(val), (op, profile_name, key, val)
@@ -149,7 +148,7 @@ def test_profiles_produce_distinct_costs():
     times = {}
     for name in profiles():
         prof = get_profile(name)
-        space = build_space(wl, spec=prof)
+        space = build_space(wl, prof)
         cfg = space.enumerate_valid()[0]
         times[name] = CostModelObjective(prof)(space, cfg).time_s
     assert len(set(times.values())) == len(times), times
@@ -172,7 +171,7 @@ def test_register_profile_roundtrip():
         assert get_profile("test_dev") is custom
         assert "test_dev" in profiles()
         wl = _representative("scan")
-        assert build_space(wl, spec=custom).enumerate_valid()
+        assert build_space(wl, custom).enumerate_valid()
     finally:
         import sys
         sys.modules["repro.hw.profiles"]._PROFILES.pop("test_dev", None)
@@ -245,7 +244,7 @@ def test_db_bare_legacy_key_rekeys_under_tpu_v5e(tmp_path):
 def test_journal_rejects_cross_profile_resume(tmp_path):
     wl = Workload(op="scan", n=128, batch=512, variant="lf")
     tpu_obj = CostModelObjective(TPU_V5E)
-    space = build_space(wl, spec=TPU_V5E)
+    space = build_space(wl, TPU_V5E)
     journal = SweepJournal.for_workload(str(tmp_path), wl, tpu_obj)
     run_sweep(space, tpu_obj, journal=journal)
 
@@ -259,7 +258,7 @@ def test_journal_rejects_cross_profile_resume(tmp_path):
 
     # the natural flow never collides: signatures differ, so the gpu
     # sweep journals to a different file in the same directory
-    gpu_space = build_space(wl, spec=GPU_SM)
+    gpu_space = build_space(wl, GPU_SM)
     gpu_journal = SweepJournal.for_workload(str(tmp_path), wl, gpu_obj)
     assert gpu_journal.path != journal.path
     res = run_sweep(gpu_space, gpu_obj, journal=gpu_journal)

@@ -132,3 +132,62 @@ def test_headerless_garbage_quarantined_not_resumed(garbage):
             assert os.path.exists(path + ".corrupt"), \
                 "unvalidatable bytes must be quarantined, not left live"
             assert not os.path.exists(path)
+
+# metric-vector entries (journal v3): an append row is either a legacy
+# (config, time) pair or a (config, time, vector) triple with an energy
+# axis — both shapes interleave freely in one journal
+_mentry = st.tuples(st.integers(0, len(CONFIGS) - 1),
+                    st.floats(1e-6, 1e-2, allow_nan=False),
+                    st.one_of(st.none(),
+                              st.floats(1e-9, 1e3, allow_nan=False)))
+_mop = st.one_of(
+    st.tuples(st.just("append"), st.lists(_mentry, min_size=1, max_size=5)),
+    st.tuples(st.just("tear")),
+    st.tuples(st.just("reopen")),
+)
+
+
+def _apply_metrics(journal, path, committed, op):
+    kind = op[0]
+    if kind == "append":
+        rows = []
+        for i, t, e in op[1]:
+            cfg = CONFIGS[i]
+            if e is None:                    # pre-vector writer: bare pair
+                rows.append((cfg, t))
+                committed[config_key(cfg)] = {"time_s": float(t)}
+            else:
+                vec = {"time_s": float(t), "energy_j": float(e)}
+                rows.append((cfg, t, vec))
+                committed[config_key(cfg)] = vec
+        journal.append(WL, OBJ, SPACE_SIZE, rows)
+        return journal
+    if kind == "tear":
+        with open(path, "a") as f:
+            f.write('{"k": "torn-mid-wri')
+        return journal
+    return SweepJournal(path)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(_mop, min_size=1, max_size=12))
+def test_metric_vectors_survive_any_interleaving(ops):
+    """Committed metric vectors round-trip through any interleaving of
+    appends, torn tails, and restarts; pair-shaped (pre-vector) entries
+    load as time_s-only vectors; the scalar ``load``/``entries`` views
+    stay the exact time_s projection of the vector views."""
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "journal.jsonl")
+        journal = SweepJournal(path)
+        committed = {}
+        for op in ops:
+            journal = _apply_metrics(journal, path, committed, op)
+        assert journal.load_metrics(WL, OBJ) == committed
+        assert journal.load(WL, OBJ) == \
+            {k: v["time_s"] for k, v in committed.items()}
+        # fresh instance: vector and scalar entry views are positionally
+        # parallel and agree with the committed state
+        pairs = SweepJournal(path).metric_entries()
+        assert {config_key(c): v for c, v in pairs} == committed
+        assert [(c, v["time_s"]) for c, v in pairs] \
+            == SweepJournal(path).entries()

@@ -324,7 +324,7 @@ def test_sweep_workload_journals_and_resumes(tmp_path):
     assert len(cfgs) == len(times) == len(X)
 
     class Boom(TPUCostModelObjective):
-        def batch_eval(self, *a, **kw):
+        def batch_eval_metrics(self, *a, **kw):
             raise AssertionError("journal was ignored: re-evaluated")
 
         def signature(self):

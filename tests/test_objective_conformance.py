@@ -62,7 +62,7 @@ def _gpu_cost_model():
     from repro.hw.profiles import GPU_SM
 
     space = build_space(Workload(op="scan", n=512, batch=2**17,
-                                 variant="lf"), spec=GPU_SM)
+                                 variant="lf"), GPU_SM)
     return CostModelObjective(GPU_SM, noise=0.02), space, \
         _sample_configs(space)
 
@@ -118,6 +118,29 @@ def _online_wallclock():
     return OnlineWallClockObjective(times, source="conformance"), space, cfgs
 
 
+def _policy_energy():
+    """PolicyObjective: the scalar protocol must see the policy scalar
+    exactly as the batched protocol computes it from the metric columns."""
+    from repro.core.policy import PolicyObjective
+
+    space = build_space(Workload(op="scan", n=512, batch=2**17,
+                                 variant="lf"))
+    obj = PolicyObjective(TPUCostModelObjective(noise=0.02), "energy")
+    return obj, space, _sample_configs(space, k=16)
+
+
+def _policy_memory_cap():
+    """memory_cap clamps over-budget configs to the penalty in BOTH
+    protocols; a tight cap guarantees the clamp actually fires."""
+    from repro.core.policy import Policy, PolicyObjective
+
+    space = build_space(Workload(op="fft", n=256, batch=2**14,
+                                 variant="stockham"))
+    obj = PolicyObjective(TPUCostModelObjective(),
+                          Policy("memory_cap", cap_bytes=2.0 * 256 * 64 * 8))
+    return obj, space, _sample_configs(space, k=16)
+
+
 def _multipass():
     from repro.core.multikernel import MultiPassObjective
 
@@ -147,6 +170,10 @@ FACTORIES = {
     "OnlineWallClockObjective": _online_wallclock,
     "MultiPassObjective": _multipass,
     "CompiledRooflineObjective": _compiled_roofline,
+    # one per policy family: fallback scalarization (energy) and the
+    # constraint clamp (memory_cap); latency wrapping is a numeric no-op
+    "PolicyObjective": _policy_energy,
+    "PolicyObjective_memory_cap": _policy_memory_cap,
 }
 
 
@@ -156,6 +183,7 @@ def test_every_repro_objective_subclass_has_a_factory():
     import repro.core.distributed_tuning   # noqa: F401
     import repro.core.multikernel          # noqa: F401
     import repro.core.objective            # noqa: F401
+    import repro.core.policy               # noqa: F401
     import repro.tuning.online             # noqa: F401
 
     missing = sorted(
@@ -213,3 +241,42 @@ def test_signature_distinguishes_parameterizations():
         != TPUCostModelObjective(noise=0.5).signature()
     assert OnlineWallClockObjective({}, source="serve").signature() \
         != OnlineWallClockObjective({}, source="replay").signature()
+
+
+@pytest.mark.parametrize("name", sorted(FACTORIES))
+def test_batch_eval_metrics_bit_identical_to_scalar_loop(name, monkeypatch):
+    """The vector protocol obeys the same contract per metric axis:
+    batch_eval_metrics == a sequential __call__ loop reading each axis
+    (invalid configs -> that axis's penalty), bit for bit."""
+    import time as time_mod
+
+    from repro.core.objective import metric_penalty
+
+    factory = FACTORIES[name]
+
+    def scalar_cols():
+        obj, space, cfgs = factory()
+        if hasattr(obj, "_fake_clock"):
+            monkeypatch.setattr(time_mod, "perf_counter", obj._fake_clock)
+        names = obj.metric_names()
+        cols = {n: np.empty(len(cfgs)) for n in names}
+        for i, cfg in enumerate(cfgs):
+            m = obj(space, cfg)
+            for n in names:
+                cols[n][i] = m.metric(n, metric_penalty(n)) if m.valid \
+                    else metric_penalty(n)
+        return names, cols
+
+    def batched_cols():
+        obj, space, cfgs = factory()
+        if hasattr(obj, "_fake_clock"):
+            monkeypatch.setattr(time_mod, "perf_counter", obj._fake_clock)
+        return obj.batch_eval_metrics(space, cfgs)
+
+    names, seq = scalar_cols()
+    batched = batched_cols()
+    assert set(batched) == set(names)
+    for n in names:
+        assert np.array_equal(seq[n], batched[n]), \
+            f"{name}: batch_eval_metrics[{n}] diverged from the scalar " \
+            f"loop at {np.flatnonzero(seq[n] != batched[n])[:5]}"

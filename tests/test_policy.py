@@ -1,0 +1,485 @@
+"""Policy layer: vector measurements, scalarization, Pareto fronts,
+policy-keyed persistence, and the online power-envelope guard.
+
+The multi-objective contract (docs/tuning.md): objectives answer *what
+happened* (a metric vector per config), a Policy answers *what to
+optimize*.  One exhaustive sweep journals the vectors once; every policy
+then picks its winner from the same measurements.  Everything here pins
+that contract — plus the migrations that keep pre-vector artifacts
+(schema-3 DBs, v2 journals, version-0 measurements) loading as
+time_s-only vectors.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import TPUCostModelObjective, Workload, build_space
+from repro.core.objective import (MEASUREMENT_VERSION, METRIC_ENERGY,
+                                  METRIC_PEAK_VMEM, METRIC_TIME,
+                                  PENALTY_TIME, CostModelObjective,
+                                  Measurement, metric_penalty)
+from repro.core.policy import (POLICY_NAMES, Policy, PolicyObjective,
+                               get_policy, pareto_front, pareto_mask,
+                               policy_scalar_cols)
+from repro.hw.profiles import GPU_SM, TPU_V5E
+from repro.tuning.db import SCHEMA_VERSION, TuningDB
+from repro.tuning.session import TunerSession
+from repro.tuning.sweep import run_sweep
+
+WL = Workload(op="scan", n=256, batch=2**10, variant="lf")
+
+
+# ---------------------------------------------------------------------------
+# Measurement: vector carrier with versioned serialization
+# ---------------------------------------------------------------------------
+
+def test_measurement_roundtrip_versioned():
+    m = Measurement(1e-3, True, meta={"passes": 2.0},
+                    metrics={METRIC_ENERGY: 0.5,
+                             METRIC_PEAK_VMEM: float(2**20)})
+    d = m.to_dict()
+    assert d["version"] == MEASUREMENT_VERSION
+    # through JSON (the journal/DB wire format), not just dict identity
+    m2 = Measurement.from_dict(json.loads(json.dumps(d)))
+    assert m2 == m
+    assert m2.energy_j == 0.5 and m2.peak_vmem_bytes == float(2**20)
+
+
+def test_measurement_version0_loads_time_only():
+    """Pre-vector dicts (no ``metrics``) load as time_s-only vectors."""
+    m = Measurement.from_dict({"time_s": 2e-3, "valid": True})
+    assert m.time_s == 2e-3
+    assert m.metrics == {METRIC_TIME: 2e-3}
+    assert m.energy_j is None and m.peak_vmem_bytes is None
+
+
+def test_measurement_mirrors_time_into_vector():
+    m = Measurement(3e-3, True)
+    assert m.metrics[METRIC_TIME] == 3e-3
+    assert m.metric(METRIC_ENERGY) is None
+    assert m.metric(METRIC_ENERGY, 7.0) == 7.0
+
+
+def test_cost_model_emits_energy_and_vmem():
+    space = build_space(WL)
+    obj = CostModelObjective(TPU_V5E)
+    m = obj(space, space.enumerate_valid()[0])
+    assert m.valid
+    # energy = idle_w*t + peak_compute_w*t_comp + hbm_pj_per_byte*bytes:
+    # strictly more than the idle floor, and derived FROM the latency
+    # (never an input to it — pinned by the tpu_v5e fixture test)
+    assert m.energy_j is not None and m.energy_j > TPU_V5E.idle_w * m.time_s
+    assert m.peak_vmem_bytes is not None and m.peak_vmem_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Policy scalarization
+# ---------------------------------------------------------------------------
+
+def _cols():
+    return {METRIC_TIME: np.array([1.0, 3.0, 10.0]),
+            METRIC_ENERGY: np.array([30.0, 2.0, 1.0]),
+            METRIC_PEAK_VMEM: np.array([100.0, 50.0, 10.0])}
+
+
+def test_policy_registry_and_prune_safety():
+    assert POLICY_NAMES == ("latency", "energy", "edp", "memory_cap")
+    assert get_policy("latency").prune_safe
+    for name in ("energy", "edp"):
+        assert not get_policy(name).prune_safe
+    assert not get_policy("memory_cap:1024").prune_safe
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("throughput")
+
+
+def test_policy_keys():
+    assert get_policy("energy").key == "energy"
+    assert get_policy("memory_cap:2048").key == "memory_cap[2048]"
+    # no explicit cap: the profile's vmem budget fills in
+    pol = get_policy("memory_cap", TPU_V5E)
+    assert pol.cap_bytes == float(TPU_V5E.vmem_budget)
+
+
+def test_scalarize_matches_scalarize_cols_bitwise():
+    cols = _cols()
+    for name in ("latency", "energy", "edp", "memory_cap:60"):
+        pol = get_policy(name)
+        s = pol.scalarize_cols(cols)
+        for i in range(3):
+            vec = {k: float(v[i]) for k, v in cols.items()}
+            assert pol.scalarize(vec) == s[i], (name, i)
+
+
+def test_each_policy_picks_a_different_winner():
+    cols = _cols()
+    # latency: t=[1,3,10] -> row 0; energy: e=[30,2,1] -> row 2;
+    # edp: t*e=[30,6,10] -> row 1
+    winners = {n: int(np.argmin(policy_scalar_cols(get_policy(n), cols)))
+               for n in ("latency", "energy", "edp")}
+    assert winners == {"latency": 0, "energy": 2, "edp": 1}
+
+
+def test_missing_energy_axis_falls_back_to_time():
+    cols = {METRIC_TIME: np.array([2.0, 1.0])}
+    pol = get_policy("energy")
+    assert list(policy_scalar_cols(pol, cols)) == [2.0, 1.0]
+    assert pol.scalarize({METRIC_TIME: 2.0}) == 2.0
+    # NaN rows (pre-vector journal resume) fall back per-row
+    cols[METRIC_ENERGY] = np.array([np.nan, 5.0])
+    assert list(policy_scalar_cols(pol, cols)) == [2.0, 5.0]
+
+
+def test_memory_cap_clamps_over_budget_rows_to_penalty():
+    cols = _cols()                       # vmem [100, 50, 10]
+    scal = policy_scalar_cols(get_policy("memory_cap:60"), cols)
+    assert scal[0] == PENALTY_TIME       # 100 > 60: clamped
+    assert scal[1] == 3.0 and scal[2] == 10.0
+    # the unclamped scalar form reports inf (PolicyObjective clamps it)
+    assert get_policy("memory_cap:60").scalarize(
+        {k: float(v[0]) for k, v in _cols().items()}) == float("inf")
+
+
+def test_penalty_time_rows_stay_penalty_under_every_policy():
+    """A failed measurement must lose under every policy, even when its
+    other axes look attractive."""
+    cols = {METRIC_TIME: np.array([PENALTY_TIME, 1.0]),
+            METRIC_ENERGY: np.array([1e-9, 5.0]),
+            METRIC_PEAK_VMEM: np.array([1.0, 10.0])}
+    for name in ("latency", "energy", "edp", "memory_cap:1e9"):
+        scal = policy_scalar_cols(get_policy(name), cols)
+        assert scal[0] == PENALTY_TIME, name
+        assert scal[1] != PENALTY_TIME, name
+
+
+# ---------------------------------------------------------------------------
+# Pareto front
+# ---------------------------------------------------------------------------
+
+def test_pareto_mask_basic_domination():
+    cols = {METRIC_TIME: np.array([1.0, 2.0, 3.0]),
+            METRIC_ENERGY: np.array([3.0, 2.0, 1.0])}
+    assert list(pareto_mask(cols)) == [True, True, True]   # a real front
+    cols[METRIC_ENERGY] = np.array([1.0, 2.0, 3.0])        # row 0 dominates
+    assert list(pareto_mask(cols)) == [True, False, False]
+
+
+def test_pareto_mask_keeps_exact_ties():
+    cols = {METRIC_TIME: np.array([1.0, 1.0, 2.0]),
+            METRIC_ENERGY: np.array([5.0, 5.0, 5.0])}
+    assert list(pareto_mask(cols)) == [True, True, False]
+
+
+def test_pareto_mask_excludes_failed_rows():
+    cols = {METRIC_TIME: np.array([PENALTY_TIME, 1.0]),
+            METRIC_ENERGY: np.array([0.5, 2.0])}
+    assert list(pareto_mask(cols)) == [False, True]
+
+
+def test_pareto_front_contains_every_policy_optimum():
+    """Whatever scalarization a policy applies, its optimum is always on
+    the front — the property that lets resolve() answer any policy from
+    one sweep."""
+    space = build_space(WL)
+    obj = CostModelObjective(TPU_V5E)
+    cands = space.enumerate_valid()
+    cols = obj.batch_eval_metrics(space, cands, assume_valid=True)
+    front = pareto_front(cols, cands, obj.metric_names())
+    assert front
+    for name in ("latency", "energy", "edp"):
+        pol = get_policy(name)
+        # the front achieves the global optimum of every policy scalar
+        # (by value: an argmin row tied on one axis may be dominated by a
+        # same-scalar row that is strictly better elsewhere)
+        global_best = float(np.min(policy_scalar_cols(pol, cols)))
+        front_best = min(pol.scalarize(vec) for _, vec in front)
+        assert front_best == global_best, name
+
+
+# ---------------------------------------------------------------------------
+# The sweep under a policy
+# ---------------------------------------------------------------------------
+
+def test_run_sweep_journals_vectors_and_serves_every_policy(tmp_path):
+    from repro.tuning.sweep import SweepJournal
+    space = build_space(WL)
+    obj = CostModelObjective(TPU_V5E)
+    journal = SweepJournal.for_workload(str(tmp_path), WL, obj)
+    res = run_sweep(space, obj, journal=journal)
+    assert res.policy is None and res.metrics is not None
+    assert set(res.metrics) == set(obj.metric_names())
+    assert res.pareto                       # non-empty front rides along
+
+    # the journal holds full vectors ...
+    vecs = journal.load_metrics(WL, obj)
+    assert vecs and all(METRIC_ENERGY in v for v in vecs.values())
+
+    # ... so a policy re-run resumes 100% (zero fresh evaluations) and
+    # picks its own winner from the same measurements
+    res_e = run_sweep(space, obj, journal=SweepJournal(journal.path),
+                      policy="energy")
+    assert res_e.evaluations == 0 and res_e.resumed == res.total
+    assert res_e.policy == "energy"
+    scal = policy_scalar_cols(get_policy("energy"), res.metrics)
+    assert res_e.best_scalar == float(np.min(scal))
+    # best_time stays the winner's real seconds, not the scalar
+    i = int(np.argmin(scal))
+    assert res_e.best_time == res.metrics[METRIC_TIME][i]
+
+
+def test_run_sweep_policy_winner_differs_from_latency():
+    space = build_space(Workload(op="scan", n=1024, batch=512, variant="lf"))
+    obj = CostModelObjective(TPU_V5E)
+    lat = run_sweep(space, obj)
+    edp = run_sweep(space, obj, policy="edp")
+    scal = policy_scalar_cols(get_policy("edp"), lat.metrics)
+    assert edp.best_scalar == float(np.min(scal))
+    # as_tune_result reports the scalar the search minimized
+    tr = edp.as_tune_result()
+    assert tr.best_time == edp.best_scalar
+    assert tr.best_config == edp.best_config
+
+
+def test_prune_refuses_non_latency_policy():
+    space = build_space(WL)
+    obj = CostModelObjective(TPU_V5E)
+    with pytest.raises(ValueError, match="prune"):
+        run_sweep(space, obj, prune="analytical", policy="energy")
+    # latency composes fine (explicitly and by default)
+    assert run_sweep(space, obj, prune="analytical",
+                     policy="latency").best_config
+
+
+# ---------------------------------------------------------------------------
+# PolicyObjective: any strategy tunes any policy
+# ---------------------------------------------------------------------------
+
+def test_policy_objective_scalar_protocol():
+    space = build_space(WL)
+    inner = CostModelObjective(TPU_V5E)
+    pobj = PolicyObjective(inner, "energy")
+    cfg = space.enumerate_valid()[0]
+    m_in, m_out = inner(space, cfg), pobj(space, cfg)
+    # time_s IS the policy scalar; the vector keeps the real seconds
+    assert m_out.time_s == m_in.energy_j
+    assert m_out.metrics[METRIC_TIME] == m_in.time_s
+    assert pobj.signature() == inner.signature() + "|policy=energy"
+    assert pobj.spec is TPU_V5E
+
+
+def test_policy_objective_latency_is_numeric_noop():
+    space = build_space(WL)
+    inner = CostModelObjective(TPU_V5E)
+    pobj = PolicyObjective(inner, "latency")
+    cfgs = space.enumerate_valid()[:8]
+    assert np.array_equal(pobj.batch_eval(space, cfgs),
+                          inner.batch_eval(space, cfgs))
+
+
+def test_policy_objective_rejects_over_cap_on_every_axis():
+    pol = Policy("memory_cap", cap_bytes=1.0)    # nothing fits
+    space = build_space(WL)
+    pobj = PolicyObjective(CostModelObjective(TPU_V5E), pol)
+    cfg = space.enumerate_valid()[0]
+    m = pobj(space, cfg)
+    assert not m.valid and m.time_s == PENALTY_TIME
+    cols = pobj.batch_eval_metrics(space, [cfg], assume_valid=True)
+    for n in pobj.metric_names():
+        assert cols[n][0] == metric_penalty(n)
+
+
+# ---------------------------------------------------------------------------
+# Policy-keyed persistence (DB schema 4) and session resolution
+# ---------------------------------------------------------------------------
+
+def test_db_keys_policies_separately(tmp_path):
+    db = TuningDB(path=str(tmp_path / "db.json"), platform="tpu_v5e")
+    db.store(WL, {"radix": 4}, 1e-3, "exhaustive", 5)
+    db.store(WL, {"radix": 8}, 2e-3, "exhaustive", 5, policy="energy",
+             metrics={METRIC_TIME: 2e-3, METRIC_ENERGY: 0.1})
+    assert db.lookup(WL) == {"radix": 4}
+    assert db.lookup(WL, policy="latency") == {"radix": 4}
+    assert db.lookup(WL, policy="energy") == {"radix": 8}
+    assert db.lookup(WL, policy="edp") is None
+
+
+def test_db_schema3_scalar_entries_migrate_to_vectors(tmp_path):
+    path = str(tmp_path / "db.json")
+    legacy = {"schema": 3, "entries": {
+        f"tpu_v5e|{WL.key}": {"config": {"radix": 4}, "time_s": 1e-3,
+                              "method": "bayesian", "evaluations": 5,
+                              "profile": "tpu_v5e"}}}
+    with open(path, "w") as f:
+        json.dump(legacy, f)
+    db = TuningDB(path=path, platform="tpu_v5e")
+    # the scalar entry resolves as the latency winner, vectorized
+    assert db.lookup(WL) == {"radix": 4}
+    entry = db.entries()[f"tpu_v5e|{WL.key}"]
+    assert entry["policy"] == "latency"
+    assert entry["metrics"] == {METRIC_TIME: 1e-3}
+    # and persists under the current schema on the next store
+    db.store(WL, {"radix": 8}, 5e-4, "bayesian", 3)
+    with open(path) as f:
+        assert json.load(f)["schema"] == SCHEMA_VERSION
+
+
+def test_session_resolves_per_policy(tmp_path):
+    path = str(tmp_path / "db.json")
+    lat = TunerSession(db_path=path)
+    lat.tune(WL, method="exhaustive")
+    cfg_lat = lat.resolve_raw(WL)
+    assert cfg_lat == lat.lookup(WL)
+    # a second session (fresh DB load: the store caches per instance)
+    # tunes the same workload for energy; both winners coexist on disk
+    eng = TunerSession(db_path=path, policy="energy")
+    eng.tune(WL, method="exhaustive")
+    cfg_eng = eng.resolve_raw(WL)
+    assert cfg_eng == eng.lookup(WL, policy="energy")
+    assert eng.lookup(WL, policy="latency") == cfg_lat
+    fresh = TunerSession(db_path=path)
+    assert fresh.lookup(WL) == cfg_lat
+    assert fresh.lookup(WL, policy="energy") == cfg_eng
+    # and they are the true per-policy optima of the same space
+    space = build_space(WL)
+    obj = CostModelObjective(TPU_V5E)
+    cands = space.enumerate_valid()
+    cols = obj.batch_eval_metrics(space, cands, assume_valid=True)
+    assert cfg_lat == cands[int(np.argmin(cols[METRIC_TIME]))]
+    scal = policy_scalar_cols(get_policy("energy"), cols)
+    assert cfg_eng == cands[int(np.argmin(scal))]
+
+
+def test_session_tune_stores_real_seconds_under_policy(tmp_path):
+    session = TunerSession(db_path=str(tmp_path / "db.json"),
+                           policy="energy")
+    session.tune(WL, method="exhaustive")
+    entry = next(iter(session.db.entries().values()))
+    assert entry["policy"] == "energy"
+    # time_s in the DB is wall-clock seconds, never the policy scalar
+    assert entry["time_s"] == entry["metrics"][METRIC_TIME]
+    assert entry["time_s"] < 1.0
+
+
+@pytest.mark.parametrize("method", ["bayesian", "random", "analytical"])
+def test_non_exhaustive_strategies_accept_policies(tmp_path, method):
+    session = TunerSession(db_path=str(tmp_path / "db.json"), policy="edp")
+    res = session.tune(WL, method=method, max_evals=16)
+    assert res.best_config
+    assert session.resolve_raw(WL) == session.lookup(WL, policy="edp")
+
+
+# ---------------------------------------------------------------------------
+# Online tuning: the power-envelope guard
+# ---------------------------------------------------------------------------
+
+def _watts(session, cfg):
+    space = build_space(WL)
+    m = CostModelObjective(session.spec)(space, cfg)
+    return m.energy_j / m.time_s
+
+
+def test_online_power_envelope_vetoes_hot_candidates(tmp_path):
+    from repro.tuning import OnlineTuner
+    from repro.tuning.online import ranked_candidates
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    prior = session.resolve_raw(WL)
+    space = build_space(WL)
+    cands = ranked_candidates(space, 8)
+    incumbent_w = _watts(session, prior)
+
+    tuner = OnlineTuner(WL, session, prior=prior, candidates=list(cands),
+                        power_envelope=1.0, store=False)
+    # drive enough steady traffic to walk the candidate list
+    for _ in range(4000):
+        tuner.observe(1e-3)
+        if tuner.finished:
+            break
+    assert tuner.power_vetoed, "no candidate was hotter than the incumbent"
+    for cfg in tuner.power_vetoed:
+        assert _watts(session, cfg) > incumbent_w
+    # vetoed configs never spent production traffic as trials
+    vetoed_keys = {json.dumps(c, sort_keys=True) for c in tuner.power_vetoed}
+    trialed = {json.dumps(t.config, sort_keys=True) for t in tuner.trials}
+    assert not (vetoed_keys & trialed)
+    assert tuner.summary()["power_vetoed"] == len(tuner.power_vetoed)
+
+
+def test_online_power_envelope_off_by_default(tmp_path):
+    from repro.tuning import OnlineTuner
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    tuner = OnlineTuner(WL, session, store=False)
+    assert tuner.power_envelope is None and tuner.power_vetoed == []
+    with pytest.raises(ValueError):
+        OnlineTuner(WL, session, power_envelope=0.0, store=False)
+
+
+# ---------------------------------------------------------------------------
+# spec= -> profile= deprecation
+# ---------------------------------------------------------------------------
+
+def test_build_space_spec_kwarg_warns():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        build_space(WL, GPU_SM)                       # canonical: silent
+    with pytest.warns(DeprecationWarning, match="profile"):
+        space = build_space(WL, spec=GPU_SM)
+    assert space.spec is GPU_SM
+
+
+def test_plan_for_spec_kwarg_warns():
+    from repro.kernels.blocks.plan import plan_for
+    space = build_space(WL)
+    cfg = space.enumerate_valid()[0]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        canonical = plan_for(WL, cfg, profile=TPU_V5E)
+    with pytest.warns(DeprecationWarning, match="profile"):
+        legacy = plan_for(WL, cfg, spec=TPU_V5E)
+    assert legacy.stages == canonical.stages
+
+
+def test_cost_model_spec_kwarg_warns():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        canonical = CostModelObjective(profile=TPU_V5E)
+    with pytest.warns(DeprecationWarning, match="profile"):
+        legacy = CostModelObjective(spec=TPU_V5E)
+    assert legacy.signature() == canonical.signature()
+
+
+# ---------------------------------------------------------------------------
+# ML dataset: metric-aware labels
+# ---------------------------------------------------------------------------
+
+def test_dataset_labels_follow_policy(tmp_path):
+    """``policy=`` relabels the same sweep with that policy's scalars —
+    journaled once under the raw objective, consumed by every policy."""
+    from repro.tuning.ml.dataset import dataset_from_journal, sweep_workload
+    obj = CostModelObjective(TPU_V5E)
+    cfgs, _, t_lat = sweep_workload(WL, obj, journal_dir=str(tmp_path))
+    cfgs_e, _, t_eng = sweep_workload(WL, obj, journal_dir=str(tmp_path),
+                                      policy="energy")
+    assert cfgs_e == cfgs                     # same sweep, same order
+    space = build_space(WL)
+    cols = obj.batch_eval_metrics(space, cfgs, assume_valid=True)
+    assert np.array_equal(np.asarray(t_lat), cols[METRIC_TIME])
+    assert np.array_equal(
+        np.asarray(t_eng),
+        policy_scalar_cols(get_policy("energy"), cols))
+
+    # the journal path agrees: one file on disk serves both labelings
+    files = [f for f in __import__("os").listdir(str(tmp_path))
+             if f.endswith(".jsonl")]
+    assert len(files) == 1
+    import os
+    path = os.path.join(str(tmp_path), files[0])
+    ds_lat = dataset_from_journal(path)
+    ds_eng = dataset_from_journal(path, policy="energy")
+    assert len(ds_lat.y) == len(ds_eng.y) == len(cfgs)
+    assert not np.array_equal(ds_lat.y, ds_eng.y)
+    # rows are labeled log(slowdown vs the group's best) of the policy
+    # scalar — recompute from the raw metric columns
+    logs = np.log(np.maximum(
+        policy_scalar_cols(get_policy("energy"), cols), 1e-12))
+    assert np.allclose(np.sort(ds_eng.y), np.sort(logs - logs.min()))

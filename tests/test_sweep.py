@@ -37,9 +37,9 @@ class _Counting(TPUCostModelObjective):
         super().__init__(**kw)
         self.fresh = 0
 
-    def batch_eval(self, space, cfgs, **kw):
+    def batch_eval_metrics(self, space, cfgs, **kw):
         self.fresh += len(cfgs)
-        return super().batch_eval(space, cfgs, **kw)
+        return super().batch_eval_metrics(space, cfgs, **kw)
 
     def signature(self):
         return TPUCostModelObjective(noise=self.noise).signature()
@@ -52,10 +52,10 @@ class _Killed(_Counting):
         super().__init__(**kw)
         self.after = after
 
-    def batch_eval(self, space, cfgs, **kw):
+    def batch_eval_metrics(self, space, cfgs, **kw):
         if self.fresh >= self.after:
             raise KeyboardInterrupt
-        return super().batch_eval(space, cfgs, **kw)
+        return super().batch_eval_metrics(space, cfgs, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,8 @@ import numpy as np
 
 from repro.core import (AnalyticalTuner, BayesianTuner, CachedObjective,
                         ExhaustiveSearch, TPUCostModelObjective, TuningDB,
-                        Workload, build_space, get_config, tune_offline)
+                        Workload, build_space)
+from repro.tuning import TunerSession
 from repro.core.metrics import phi
 
 
@@ -13,8 +14,9 @@ def test_offline_online_flow(tmp_path):
     """Offline BO -> DB -> online kernel launch consumes the stored config."""
     db = TuningDB(path=str(tmp_path / "db.json"))
     wl = Workload(op="scan", n=256, batch=1024, variant="ks")
-    res = tune_offline(wl, method="bayesian", db=db)
-    cfg = get_config(wl, db=db)
+    session = TunerSession(db=db)
+    res = session.tune(wl, method="bayesian")
+    cfg = session.resolve_raw(wl)
     assert cfg == res.best_config
 
     from repro.kernels.scan.ops import prefix_sum

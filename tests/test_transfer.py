@@ -92,7 +92,7 @@ def test_same_family_history_does_transfer():
 
 def _journal_tpu_sweep(journal_dir, wl):
     ExhaustiveSearch(journal_dir=str(journal_dir)).tune(
-        build_space(wl, spec=TPU_V5E), CostModelObjective(TPU_V5E))
+        build_space(wl, TPU_V5E), CostModelObjective(TPU_V5E))
 
 
 def test_journal_history_reweights_by_profile_distance(tmp_path):
@@ -130,7 +130,7 @@ def test_transfer_strategy_warm_start_finds_optimum_faster(tmp_path):
     wl = Workload(op="scan", n=256, batch=2**18, variant="lf")
     _journal_tpu_sweep(tmp_path, wl)
 
-    sp = build_space(wl, spec=GPU_SM)
+    sp = build_space(wl, GPU_SM)
     best = ExhaustiveSearch().tune(sp, CostModelObjective(GPU_SM)).best_time
 
     warm = transfer_strategy(sp, CachedObjective(CostModelObjective(GPU_SM)),

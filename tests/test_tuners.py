@@ -6,8 +6,7 @@ import pytest
 
 from repro.core import (AnalyticalTuner, BayesianTuner, CachedObjective,
                         ExhaustiveSearch, RandomSearch, TPUCostModelObjective,
-                        TuningDB, Workload, build_space, get_config,
-                        tune_offline)
+                        TuningDB, Workload, build_space)
 from repro.core.objective import Measurement, PENALTY_TIME
 
 
@@ -82,16 +81,18 @@ def test_tuning_db_roundtrip(tmp_path):
     assert db2.lookup(wl) == {"tile_n": 512}   # persisted
 
 
-def test_get_config_online_fallback(tmp_path):
+def test_resolve_online_fallback(tmp_path):
+    from repro.tuning import TunerSession
     db = TuningDB(path=str(tmp_path / "db.json"))
     wl = Workload(op="scan", n=256, batch=4096, variant="ks")
-    cfg = get_config(wl, db=db)                # miss -> analytical, instant
+    cfg = TunerSession(db=db).resolve_raw(wl)  # miss -> analytical, instant
     assert build_space(wl).is_valid(cfg)
 
 
-def test_tune_offline_populates_db(tmp_path):
+def test_session_tune_populates_db(tmp_path):
+    from repro.tuning import TunerSession
     db = TuningDB(path=str(tmp_path / "db.json"))
     wl = Workload(op="fft", n=256, batch=2**18, variant="stockham")
-    res = tune_offline(wl, method="bayesian", db=db)
+    res = TunerSession(db=db).tune(wl, method="bayesian")
     assert db.lookup(wl) == res.best_config
     assert res.evaluations > 0

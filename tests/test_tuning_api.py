@@ -2,11 +2,10 @@
 import json
 import os
 import threading
-import warnings
 
 import pytest
 
-from repro.core import TuningDB, Workload, build_space, get_config, tune_offline
+from repro.core import TuningDB, Workload, build_space
 from repro.tuning import (TunerSession, default_session, get_strategy,
                           overrides, registered_kernels, set_default_session,
                           strategies)
@@ -173,41 +172,22 @@ def test_overrides_nest_independently_across_threads(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# retired facade: hard ImportError pointers
 # ---------------------------------------------------------------------------
 
-def test_shims_warn_and_match_session(tmp_path):
-    db = TuningDB(path=str(tmp_path / "db.json"))
-    wl = _wl(n=512, batch=2048, variant="lf")
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        cfg = get_config(wl, db=db)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    # identical to what a session bound to the same DB resolves (raw)
-    assert cfg == TunerSession(db=db).resolve_raw(wl)
-    assert build_space(wl).is_valid(cfg)
-
-
-def test_tune_offline_shim_populates_db_and_warns(tmp_path):
-    db = TuningDB(path=str(tmp_path / "db.json"))
-    wl = _wl(n=256, batch=2048, variant="lf")
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        res = tune_offline(wl, method="random", db=db, max_evals=8)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert db.lookup(wl) == res.best_config
-    with warnings.catch_warnings(record=True):
-        warnings.simplefilter("ignore")
-        assert get_config(wl, db=db) == res.best_config
-
-
-def test_global_db_warns_and_is_default_sessions_db():
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        from repro.core import global_db
-        db = global_db()
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert db is default_session().db
+def test_legacy_tuner_facade_is_retired():
+    """The deprecated repro.core.tuner facade is gone: importing it must
+    fail loudly with a pointer at the replacement, and the old names must
+    no longer leak from repro.core."""
+    with pytest.raises(ImportError, match="repro.tuning"):
+        import repro.core.tuner  # noqa: F401
+    import repro.core as core
+    for name in ("get_config", "tune_offline", "global_db"):
+        assert not hasattr(core, name)
+    # the TuningDB re-export survives the retirement
+    from repro.core import TuningDB as ReExported
+    from repro.tuning.db import TuningDB as Canonical
+    assert ReExported is Canonical
 
 
 # ---------------------------------------------------------------------------
