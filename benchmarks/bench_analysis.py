@@ -1,0 +1,109 @@
+"""Static-analysis wall-clock gate: the full lint must stay cheap.
+
+``tune.py lint`` only stays on every push while it stays fast, so this
+bench times each stage of the zero-execution pass (docs/analysis.md) —
+the AST rule sweep over ``src/repro``, the contract fingerprints, and
+the complete op x profile invariant sweep (plan soundness, model
+agreement, feasibility, dead knobs over the whole suite grid) — and
+**gates the total under 10 s**. The stage split makes regressions
+attributable: a new lint rule shows up in the ast row, a space-growth
+blowup in the invariants row.
+
+The run must also come back *clean* (gate): a finding here means the
+tree no longer lints — CI's lint-analysis job would fail anyway, but the
+bench failing too keeps bench-smoke honest about what it timed (an
+early-erroring pass times nothing).
+
+Standalone (the CI bench-smoke invocation):
+
+  PYTHONPATH=src:. python benchmarks/bench_analysis.py \
+      --json BENCH_analysis.json
+
+exits non-zero when a gate fails; ``run.py --only analysis`` emits the
+same rows as a section.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+BUDGET_S = 10.0
+
+
+def run(emit, seed: int = 0, smoke: bool = False) -> List[str]:
+    """Emit analysis timing rows; returns gate-failure strings."""
+    from repro.analysis import (check_fingerprints, check_invariants,
+                                default_fixture_path, lint_tree)
+
+    t0 = time.perf_counter()
+    ast_findings = lint_tree()
+    t_ast = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fp_findings = check_fingerprints(default_fixture_path())
+    t_fp = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    inv_findings = check_invariants()
+    t_inv = time.perf_counter() - t0
+
+    total = t_ast + t_fp + t_inv
+    emit(f"analysis,ALL,,,ast_lint,seconds,{t_ast:.3f},"
+         f"findings={len(ast_findings)}")
+    emit(f"analysis,ALL,,,fingerprints,seconds,{t_fp:.3f},"
+         f"findings={len(fp_findings)}")
+    emit(f"analysis,ALL,,,invariants,seconds,{t_inv:.3f},"
+         f"findings={len(inv_findings)}")
+    emit(f"analysis,ALL,,,full_lint,seconds,{total:.3f},"
+         f"gate<{BUDGET_S:g}s")
+
+    failures: List[str] = []
+    if total >= BUDGET_S:
+        failures.append(
+            f"full static-analysis pass took {total:.2f}s "
+            f"(budget {BUDGET_S:g}s) — too slow to gate every push; find "
+            f"the regressed stage in the per-stage rows")
+    n_findings = len(ast_findings) + len(fp_findings) + len(inv_findings)
+    if n_findings:
+        failures.append(
+            f"{n_findings} finding(s) on the shipped tree — run "
+            f"`python -m repro.launch.tune lint` for the list")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Full static-analysis pass wall-clock gate")
+    ap.add_argument("--json", default=None,
+                    help="write the rows + gate verdict here "
+                         "(e.g. BENCH_analysis.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for harness uniformity (the full pass "
+                         "is already the smoke-sized workload)")
+    args = ap.parse_args(argv)
+
+    rows: List[str] = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    failures = run(emit, seed=args.seed, smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "analysis", "seed": args.seed,
+                       "smoke": bool(args.smoke), "budget_s": BUDGET_S,
+                       "rows": rows, "failures": failures},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    for failure in failures:
+        print(f"[bench-analysis] FAIL: {failure}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

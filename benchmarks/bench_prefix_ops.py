@@ -9,14 +9,13 @@ Emits CSV rows: table,op,variant,N,method,metric,value,evals
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (HOST_ELEMS, NOISE, gflops_fft, mdata_per_s,
+from benchmarks.common import (HOST_ELEMS, gflops_fft, mdata_per_s,
                                median_time, mrows_per_s, tune_all_methods)
 from repro.configs.paper_ops import PREFIX_OPS, TOTAL_ELEMS
 from repro.core import Workload

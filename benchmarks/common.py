@@ -14,11 +14,7 @@ from __future__ import annotations
 
 import math
 import time
-from typing import Callable, Dict, List
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Callable, Dict
 
 from repro.core import (AnalyticalTuner, CachedObjective,
                         TPUCostModelObjective, Workload, build_space)

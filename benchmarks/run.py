@@ -15,7 +15,11 @@ Prints ``name,...`` CSV rows:
       (the BENCH_transfer gate: warm must halve cold's evaluation bill);
   pareto              — per-policy sweep winners + Pareto-front sizes
       (the BENCH_pareto gate: the energy policy must flip at least one
-      winner with strictly lower modeled joules).
+      winner with strictly lower modeled joules);
+  analysis            — static-analysis pass timing per stage
+      (the BENCH_analysis gate: the full zero-execution lint — AST rules,
+      fingerprints, op x profile invariants — must finish under 10 s and
+      come back clean).
 
 ``--seed`` flows into every stochastic section so CI runs are
 reproducible; ``--json-dir`` writes one BENCH_<SECTION>.json per section
@@ -35,7 +39,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
                          "resolve,blocks,sweep,ml_predict,online,transfer,"
-                         "pareto")
+                         "pareto,analysis")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -93,6 +97,10 @@ def main() -> None:
     if begin("pareto"):
         from benchmarks.bench_pareto import run as run_pareto
         gate_failures += run_pareto(emit, seed=args.seed, smoke=args.smoke)
+    if begin("analysis"):
+        from benchmarks.bench_analysis import run as run_analysis
+        gate_failures += run_analysis(emit, seed=args.seed,
+                                      smoke=args.smoke)
 
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)

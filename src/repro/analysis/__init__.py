@@ -1,0 +1,61 @@
+"""Static analysis for the tuning stack (``tune.py lint``, docs/analysis.md).
+
+Two halves, one report:
+
+  * **semantic invariants** (:mod:`repro.analysis.invariants`) — plan
+    soundness, model agreement, feasibility, and dead knobs for every
+    ``known_ops()`` op under every registered hardware profile, plus
+    version-drift fingerprints (:mod:`repro.analysis.fingerprints`) for
+    the persisted contracts;
+  * **repo-convention AST lint** (:mod:`repro.analysis.astlint`) — pure
+    stdlib ``ast`` rules over ``src/repro`` enforcing the conventions the
+    stack's tests rely on (injectable clocks, the O_APPEND journal
+    helper, no retired shims or deprecated aliases, vector-objective
+    overrides, no mutable defaults).
+
+Everything is pure inspection: no kernel executes, no file is written
+(except ``--write-fingerprints``), and a full run stays under the
+``bench_analysis`` wall-clock gate.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.analysis.astlint import RULES, LintContext, lint_source, lint_tree
+from repro.analysis.findings import (Finding, apply_baseline, load_baseline,
+                                     report_dict)
+from repro.analysis.fingerprints import (CONTRACTS, check_fingerprints,
+                                         current_fingerprints,
+                                         default_fixture_path,
+                                         write_fingerprints)
+from repro.analysis.invariants import (check_dead_knobs, check_invariants,
+                                       check_space, find_dead_knobs,
+                                       suite_grid)
+
+__all__ = [
+    "Finding", "RULES", "LintContext", "CONTRACTS",
+    "lint_source", "lint_tree",
+    "apply_baseline", "load_baseline", "report_dict",
+    "check_fingerprints", "current_fingerprints", "default_fixture_path",
+    "write_fingerprints",
+    "check_dead_knobs", "check_invariants", "check_space", "find_dead_knobs",
+    "suite_grid",
+    "run_lint",
+]
+
+
+def run_lint(pkg_root: Optional[str] = None,
+             fingerprint_path: Optional[str] = None,
+             invariants: bool = True) -> List[Finding]:
+    """The full pass: AST lint + fingerprints + semantic invariants.
+
+    ``invariants=False`` skips the (comparatively slow) op x profile
+    sweep — the mode pre-commit hooks want; CI and the bench gate run
+    everything.
+    """
+    findings = lint_tree(pkg_root)
+    findings += check_fingerprints(fingerprint_path
+                                   or default_fixture_path())
+    if invariants:
+        findings += check_invariants()
+    return findings

@@ -145,10 +145,11 @@ def all_archs() -> Sequence[str]:
 
 def _load_all() -> None:
     # importing the config modules populates the registry
-    from repro.configs import (gemma_2b, minitron_4b, qwen15_05b, granite_34b,  # noqa
-                               whisper_large_v3, llama32_vision_90b,
-                               qwen2_moe_a27b, qwen3_moe_30b_a3b,
-                               recurrentgemma_9b, mamba2_130m)
+    import importlib
+    for mod in ("gemma_2b", "minitron_4b", "qwen15_05b", "granite_34b",
+                "whisper_large_v3", "llama32_vision_90b", "qwen2_moe_a27b",
+                "qwen3_moe_30b_a3b", "recurrentgemma_9b", "mamba2_130m"):
+        importlib.import_module(f"repro.configs.{mod}")
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:

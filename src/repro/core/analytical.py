@@ -20,10 +20,18 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.space import Config, SearchSpace, Workload
+from repro.core.space import Config, SearchSpace
 
 OVERLAP_GRID = 4          # grid programs needed for full DMA/compute overlap
 OCCUPANCY_BAND = (0.60, 1.00)
+
+# keys every resources() dict carries (the plan <-> model contract);
+# repro.analysis verifies presence and finiteness for every valid config
+# of every op x profile, so the expert model can never silently read a
+# missing quantity as 0
+RESOURCE_KEYS = ("grid", "vmem", "occupancy", "ilp", "radix", "passes",
+                 "block_bytes", "seq_tiles", "stage_count", "steps_per_pass",
+                 "ragged", "lane_eff", "sublane_eff")
 
 
 @dataclasses.dataclass

@@ -20,11 +20,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.objective import Measurement, Objective, PENALTY_TIME
+from repro.core.objective import Objective, PENALTY_TIME
 from repro.core.space import Config, SearchSpace
 
 

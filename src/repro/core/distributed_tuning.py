@@ -21,8 +21,7 @@ evaluation frugality matters here even more than on-kernel.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.core.bayesian import BayesianTuner, TuneResult
 from repro.core.exhaustive import ExhaustiveSearch

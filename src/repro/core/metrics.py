@@ -9,7 +9,7 @@ punishes any single bad size hard — exactly why the paper chose it.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Sequence
+from typing import Mapping, Sequence
 
 
 def efficiency(achieved_time: float, best_time: float) -> float:

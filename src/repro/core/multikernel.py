@@ -15,12 +15,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Dict, List
 
 from repro.core.analytical import AnalyticalTuner
-from repro.core.objective import Measurement, Objective, PENALTY_TIME, TPUCostModelObjective
-from repro.core.space import (Config, ParamSpec, SearchSpace, Workload,
-                              build_space, large_fft_space, pow2_range)
+from repro.core.objective import Measurement, Objective, PENALTY_TIME, CostModelObjective
+from repro.core.space import Config, SearchSpace, Workload, build_space
 from repro.hw.profiles import active_profile, dtype_bytes
 
 
@@ -86,7 +85,7 @@ class MultiPassObjective(Objective):
     """
 
     def __init__(self, inner: Objective = None):
-        self.inner = inner or TPUCostModelObjective()
+        self.inner = inner or CostModelObjective()
 
     def __call__(self, space: SearchSpace, cfg: Config) -> Measurement:
         wl = space.workload

@@ -77,6 +77,12 @@ METRIC_PENALTIES: Dict[str, float] = {
 # bump when the serialized Measurement layout changes
 MEASUREMENT_VERSION = 1
 
+# the serialized layout ``Measurement.to_dict`` emits, fingerprinted by
+# ``repro.analysis`` against MEASUREMENT_VERSION: journals, DB entries and
+# traces all persist this dict, so reshaping it without a version bump
+# silently corrupts every consumer's migration path
+MEASUREMENT_FIELDS = ("version", "time_s", "valid", "metrics", "meta")
+
 
 def metric_penalty(name: str) -> float:
     """The penalty clamp for one metric (PENALTY_TIME for unknown names)."""

@@ -18,7 +18,7 @@ import inspect
 import itertools
 import math
 import warnings
-from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -363,12 +363,15 @@ def attention_space(wl: Workload,
     wl.n = kv sequence length; wl.batch = #(batch*heads) rows.
     """
     spec = spec if spec is not None else active_profile()
+    # no `unroll` knob: the flash kernel's inner loop is the block_k walk —
+    # there is nothing to unroll independently of block_k, so sweeping it
+    # only duplicated configs (the repro.analysis dead-knob detector flags
+    # exactly this class; same pruning as linrec's unroll)
     params = [
         ParamSpec("block_q", (128, 256, 512, 1024)),
         ParamSpec("block_k", (128, 256, 512, 1024, 2048)),
         ParamSpec("rows_per_program", (1,)),
         ParamSpec("radix", (2,)),
-        ParamSpec("unroll", (1, 2)),
         ParamSpec("in_register", (0,)),
     ]
 

@@ -12,9 +12,8 @@ batch NamedSharding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

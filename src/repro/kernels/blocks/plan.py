@@ -24,7 +24,7 @@ import dataclasses
 import functools
 import math
 import warnings
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core.space import Workload, fit_block
 from repro.hw.profiles import (HardwareProfile, active_profile, dtype_bytes,
@@ -191,6 +191,58 @@ class StagePlan:
         out = 1
         for g in self.grid:
             out *= g
+        return out
+
+    def check(self, spec: HardwareProfile) -> List[str]:
+        """Structural invariant violations of this plan ([] when sound).
+
+        The zero-execution contract ``repro.analysis`` verifies for every
+        valid config of every op x profile: a violation here means the
+        planner would hand the drivers an execution that cannot launch
+        (non-positive grid/block), mis-reshapes (stage product != tile),
+        overflows the physical VMEM pool, or disagrees with its own pass
+        accounting.  Checks live on the dataclass so plan builders and the
+        analysis pass can never drift apart.
+        """
+        out: List[str] = []
+        if self.tile_n < 1 or self.rows < 1:
+            out.append(f"non-positive tile geometry: tile_n={self.tile_n} "
+                       f"rows={self.rows}")
+        if self.passes < 1:
+            out.append(f"non-positive pass count: {self.passes}")
+        if self.vmem_bytes <= 0 or self.steps_per_pass <= 0:
+            out.append(f"non-positive accounting: vmem={self.vmem_bytes} "
+                       f"steps_per_pass={self.steps_per_pass}")
+        if self.stages:
+            prod = 1
+            for r in self.stages:
+                prod *= r
+            if prod != self.tile_n:
+                out.append(f"stage radix product {prod} != tile_n "
+                           f"{self.tile_n} (stages={self.stages})")
+        if any(g < 1 for g in self.grid):
+            out.append(f"non-positive grid dim: {self.grid}")
+        if self.launches and self.passes != len(self.launches):
+            out.append(f"passes={self.passes} disagrees with "
+                       f"{len(self.launches)} launches")
+        for launch in self.launches:
+            if any(g < 1 for g in launch.grid) \
+                    or any(b < 1 for b in launch.block_shape):
+                out.append(f"launch {launch.name}: non-positive shape "
+                           f"grid={launch.grid} block={launch.block_shape}")
+            if launch.vmem_bytes > spec.vmem_bytes:
+                out.append(f"launch {launch.name}: vmem {launch.vmem_bytes} "
+                           f"exceeds the physical pool {spec.vmem_bytes}")
+            block = launch.block_shape[0] * launch.block_shape[1] \
+                * self.element_bytes
+            if launch.vmem_bytes < block:
+                out.append(f"launch {launch.name}: scratch {launch.vmem_bytes}"
+                           f" cannot hold its own BlockSpec block {block} "
+                           f"({launch.block_shape} x {self.element_bytes}B)")
+        if self.stage_vmem_bytes \
+                and max(self.stage_vmem_bytes) > spec.vmem_bytes:
+            out.append(f"stage vmem {max(self.stage_vmem_bytes)} exceeds "
+                       f"the physical pool {spec.vmem_bytes}")
         return out
 
     def resources(self) -> Dict[str, float]:
@@ -445,7 +497,9 @@ def _attention_plan(wl: Workload, cfg: Mapping[str, int], spec: HardwareProfile
         trailing=bk, lane_eff=lane_utilization(bk, spec),
         sublane_eff=sublane_utilization(bq, spec),
         occupancy=lane_utilization(bk, spec),
-        ilp=int(cfg.get("unroll", 1)), ragged=False,
+        # the flash kernel has no unroll knob (its inner loop IS the
+        # block_k walk), so the plan must not report phantom ILP from one
+        ilp=1, ragged=False,
         steps_per_pass=float(steps))
 
 

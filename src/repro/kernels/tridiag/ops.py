@@ -88,7 +88,6 @@ def cr_solve(a, b, c, d):
         x = jnp.stack([x0, x1], axis=-1)
     # back substitution
     for (a0, b0, c0, d0) in reversed(levels):
-        m = a0.shape[-1]
         xfull = jnp.zeros(a0.shape, a0.dtype)
         xfull = xfull.at[..., 1::2].set(x)
         xm = jnp.pad(xfull[..., :-1], ((0, 0), (1, 0)))
@@ -105,7 +104,6 @@ def cr_solve(a, b, c, d):
 
 def _pivot_prefix(a, b, c):
     """LU pivots e_i via normalized 2x2 Mobius-matrix prefix products."""
-    n = a.shape[-1]
     cm = jnp.pad(c[..., :-1], ((0, 0), (1, 0)))
     m00 = b
     m01 = -a * cm

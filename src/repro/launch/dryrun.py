@@ -23,10 +23,9 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (ModelConfig, SHAPES, ShapeConfig, all_archs,
+from repro.configs.base import (ModelConfig, SHAPES, all_archs,
                                 get_arch, shape_applicable)
 from repro.distributed.sharding import (ShardingDecisions, batch_specs,
                                         cache_specs, param_specs,

@@ -22,12 +22,10 @@ the compute/memory terms and cross-checks against cost_analysis().
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 _TRANSCENDENTAL = {"exp", "log", "tanh", "logistic", "sin", "cos", "rsqrt",
                    "sqrt", "erf", "log1p", "expm1", "pow", "cumsum",

@@ -5,7 +5,7 @@ Kept as FUNCTIONS so importing this module never touches jax device state
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
 

@@ -23,11 +23,10 @@ Usage:
 """
 import argparse
 import json
-import math
 import re
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.configs.base import SHAPES, all_archs, get_arch, shape_applicable
+from repro.configs.base import SHAPES, all_archs, get_arch
 from repro.hw.profiles import TPU_V5E as V5E
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,

@@ -11,8 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro.configs.base import get_arch
 from repro.data.pipeline import Batcher, DataConfig
 from repro.models.model import build_model

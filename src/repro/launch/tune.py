@@ -47,6 +47,17 @@ replays a recorded (config, step latency) trace — e.g. from
 machine: same trace + same knobs -> same trials, same rollbacks, same
 winner. With ``--db`` the promoted winner persists exactly as it would in
 production.
+
+Static analysis (zero-execution; the CI ``lint-analysis`` gate):
+
+  PYTHONPATH=src python -m repro.launch.tune lint [--json REPORT] \
+      [--baseline tests/fixtures/analysis_baseline.json] [--no-invariants]
+
+runs the full :mod:`repro.analysis` pass — repo-convention AST lint,
+version-drift fingerprints, and plan/space invariants for every op x
+profile (see docs/analysis.md) — and exits non-zero on any finding not
+suppressed by the baseline. ``--write-fingerprints`` refreshes the pinned
+contract fixture after a deliberate, version-bumped schema change.
 """
 from __future__ import annotations
 
@@ -56,7 +67,7 @@ import sys
 from typing import List, Optional
 
 from repro.configs.paper_ops import PREFIX_OPS, TOTAL_ELEMS
-from repro.core import TPUCostModelObjective, Workload
+from repro.core import CostModelObjective, Workload
 from repro.tuning import TunerSession, default_session, strategies
 
 
@@ -69,7 +80,7 @@ def tune_suite(method: str, noise: float = 0.02, verbose: bool = True,
                 wl = Workload(op=op, n=n, batch=max(TOTAL_ELEMS // n, 1),
                               variant=variant)
                 res = session.tune(wl, method=method,
-                                   objective=TPUCostModelObjective(noise=noise))
+                                   objective=CostModelObjective(noise=noise))
                 if verbose:
                     print(f"[tune] {wl.key}: {res.best_config} "
                           f"t={res.best_time*1e6:.1f}us "
@@ -111,7 +122,7 @@ def train_model_main(argv: List[str]) -> int:
                                  suite_workloads, train_bundle)
     from repro.tuning.ml.dataset import POOLED_OPS
 
-    objective = TPUCostModelObjective(noise=args.noise)
+    objective = CostModelObjective(noise=args.noise)
     try:
         workloads = suite_workloads("train", ops=_parse_ops(args.ops))
     except ValueError as e:
@@ -311,7 +322,7 @@ def compare_methods_main(argv: List[str]) -> int:
           f"{len(methods)} methodologies ...", flush=True)
     report = compare_methods(
         workloads, methods,
-        objective_factory=lambda: TPUCostModelObjective(noise=args.noise),
+        objective_factory=lambda: CostModelObjective(noise=args.noise),
         seed=args.seed, max_evals=args.max_evals,
         journal_dir=args.journal_dir,
         policies=tuple(p for p in args.policies.split(",") if p))
@@ -388,12 +399,67 @@ def eval_model_main(argv: List[str]) -> int:
     return 1 if failures else 0
 
 
+def lint_main(argv: List[str]) -> int:
+    import os
+
+    from repro.analysis import (apply_baseline, default_fixture_path,
+                                load_baseline, report_dict, run_lint,
+                                write_fingerprints)
+    ap = argparse.ArgumentParser(
+        prog="tune lint",
+        description="zero-execution static analysis: AST conventions, "
+                    "contract fingerprints, plan/space invariants "
+                    "(docs/analysis.md)")
+    ap.add_argument("--json", default=None,
+                    help="write the full machine-readable report here")
+    ap.add_argument("--baseline", default=None,
+                    help="suppression file (default: "
+                         "tests/fixtures/analysis_baseline.json when "
+                         "present)")
+    ap.add_argument("--write-fingerprints", action="store_true",
+                    help="refresh the pinned contract fixture from the "
+                         "live tree (after a deliberate, version-bumped "
+                         "schema change)")
+    ap.add_argument("--no-invariants", action="store_true",
+                    help="skip the op x profile semantic sweep (fast "
+                         "pre-commit mode; CI runs everything)")
+    ap.add_argument("--root", default=None,
+                    help="package root to AST-lint (default: the "
+                         "installed repro package)")
+    args = ap.parse_args(argv)
+
+    fixture = default_fixture_path()
+    if args.write_fingerprints:
+        write_fingerprints(fixture)
+        print(f"[lint] fingerprints written to {fixture}")
+
+    findings = run_lint(pkg_root=args.root, fingerprint_path=fixture,
+                        invariants=not args.no_invariants)
+    baseline = args.baseline
+    if baseline is None:
+        cand = os.path.join(os.path.dirname(fixture),
+                            "analysis_baseline.json")
+        baseline = cand if os.path.exists(cand) else None
+    fresh, suppressed = apply_baseline(findings, load_baseline(baseline))
+    for f in fresh:
+        print(f.render())
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report_dict(fresh, suppressed), fh, indent=1,
+                      sort_keys=True)
+        print(f"[lint] report written to {args.json}")
+    print(f"[lint] {len(fresh)} finding(s), {len(suppressed)} baselined")
+    return 1 if fresh else 0
+
+
 # ---------------------------------------------------------------------------
 # Entry point
 # ---------------------------------------------------------------------------
 
 def main(argv: Optional[List[str]] = None) -> int:
     argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if argv and argv[0] == "lint":
+        return lint_main(argv[1:])
     if argv and argv[0] == "train-model":
         return train_model_main(argv[1:])
     if argv and argv[0] == "eval-model":

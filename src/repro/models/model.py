@@ -13,7 +13,6 @@ assignment: forward takes precomputed frame/patch embeddings.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -268,7 +267,6 @@ class Model:
         cd = _cdtype(cfg)
         enc_cfg = dataclasses.replace(cfg, family="dense")
         x = _constrain_batch(frames.astype(cd), cfg)
-        b = x.shape[0]
         positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
 
         def body(h, blk):

@@ -23,7 +23,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -147,7 +147,6 @@ class CheckpointManager:
                     f"model {np.shape(leaf)} (elastic re-mesh requires "
                     f"matching global shapes)")
             restored.append(arr)
-        flat_like = jax.tree_util.tree_leaves(like)
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), restored)
         if shardings is not None:

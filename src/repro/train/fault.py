@@ -97,7 +97,6 @@ def plan_elastic_remesh(available_chips: int, model_axis: int,
     per_pod = available_chips // pods
     data = max(per_pod // model_axis, 1)
     used = pods * data * model_axis
-    full_data = data
     # per-replica batch when healthy: target_batch / (pods*data_healthy)
     new_batch = target_batch * (pods * data) // max(pods * data, 1)
     # keep divisibility: round batch down to a multiple of replicas

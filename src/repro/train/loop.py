@@ -11,7 +11,6 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import numpy as np
 
-from repro.data.pipeline import Batcher, DataConfig
 from repro.models.model import Model
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import (FaultInjector, HeartbeatWatchdog,

@@ -8,13 +8,11 @@ axis, so the full (B, L, V) logits are never all-gathered — with V on
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model import Model
 from repro.optim import (adamw, adafactor, clip_by_global_norm, warmup_cosine)
 
@@ -47,7 +45,6 @@ def make_optimizer(hp: TrainHParams):
 def cross_entropy(logits: jax.Array, targets: jax.Array, mask: jax.Array,
                   z_weight: float = 0.0) -> Tuple[jax.Array, Dict]:
     """logits fp32 (B, L, V) [vocab possibly sharded], targets (B, L)."""
-    v = logits.shape[-1]
     lse = jax.nn.logsumexp(logits, axis=-1)                        # (B, L)
     onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
               == targets[..., None])

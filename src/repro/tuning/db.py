@@ -55,6 +55,27 @@ DEFAULT_DB_PATH = os.environ.get(
     "REPRO_TUNING_DB", os.path.join(os.path.dirname(__file__), "..", "..", "..",
                                     "artifacts", "tuning_db.json"))
 
+# the entry-key shapes, as format templates: latency keys keep the schema-3
+# shape so pre-policy entries resolve; non-latency winners carry the policy
+# segment.  ``repro.analysis`` fingerprints these against SCHEMA_VERSION —
+# reshaping a key without bumping the schema orphans every stored winner.
+KEY_FORMATS = ("{platform}|{workload_key}",
+               "{platform}|policy={policy}|{workload_key}")
+
+# per-entry field layout (same contract, same fingerprint)
+ENTRY_FIELDS = ("config", "time_s", "method", "evaluations", "profile",
+                "policy", "metrics")
+
+
+def make_entry(cfg: Dict, time_s: float, method: str, evaluations: int,
+               profile: str, policy: str,
+               metrics: Mapping[str, float]) -> Dict:
+    """One schema-4 DB entry; the single construction site for
+    ``ENTRY_FIELDS``."""
+    return {"config": dict(cfg), "time_s": time_s, "method": method,
+            "evaluations": evaluations, "profile": profile,
+            "policy": policy, "metrics": dict(metrics)}
+
 
 def _migrate_entry(key: str, entry: Dict) -> Dict:
     """Schema <=3 -> 4: stamp profile, policy, and the metric vector.
@@ -138,11 +159,12 @@ class TuningDB:
     # -- access --------------------------------------------------------------
 
     def _key(self, wl, policy: Optional[str] = None) -> str:
-        # latency keys keep the schema-3 shape so pre-policy entries resolve
         pol = policy or DEFAULT_POLICY
         if pol == DEFAULT_POLICY:
-            return f"{self.platform}|{wl.key}"
-        return f"{self.platform}|policy={pol}|{wl.key}"
+            return KEY_FORMATS[0].format(platform=self.platform,
+                                         workload_key=wl.key)
+        return KEY_FORMATS[1].format(platform=self.platform, policy=pol,
+                                     workload_key=wl.key)
 
     def lookup(self, wl, policy: Optional[str] = None) -> Optional[Dict]:
         pol = policy or DEFAULT_POLICY
@@ -170,11 +192,8 @@ class TuningDB:
         vec.setdefault("time_s", float(time_s))
         with self._lock:
             self._load()
-            self._data[self._key(wl, pol)] = {
-                "config": dict(cfg), "time_s": time_s, "method": method,
-                "evaluations": evaluations, "profile": self.platform,
-                "policy": pol, "metrics": vec,
-            }
+            self._data[self._key(wl, pol)] = make_entry(
+                cfg, time_s, method, evaluations, self.platform, pol, vec)
             self._flush_locked()
 
     def entries(self) -> Dict[str, Dict]:

@@ -27,7 +27,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_ops import TOTAL_ELEMS
-from repro.core.objective import Objective, TPUCostModelObjective
+from repro.core.objective import CostModelObjective, Objective
 from repro.core.space import Config, Workload, build_space
 from repro.tuning.db import TuningDB
 from repro.tuning.ml.features import N_FEATURES, featurize_batch
@@ -179,7 +179,7 @@ def sweep_workload(wl: Workload, objective: Optional[Objective] = None,
     the raw objective — one sweep feeds every policy's dataset.  Default
     ``None`` keeps the historical time labels bit-for-bit.
     """
-    objective = objective or TPUCostModelObjective()
+    objective = objective or CostModelObjective()
     wl = wl.canonical()
     space = build_space(wl)
     journal = SweepJournal.for_workload(journal_dir, wl, objective) \
@@ -211,7 +211,7 @@ def build_dataset(workloads: Iterable[Workload],
     with that policy's scalars instead of raw seconds (see
     :func:`sweep_workload`).
     """
-    objective = objective or TPUCostModelObjective()
+    objective = objective or CostModelObjective()
     b = _Builder()
     for wl in workloads:
         wl = wl.canonical()

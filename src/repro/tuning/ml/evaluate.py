@@ -30,7 +30,7 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
-from repro.core.objective import Objective, TPUCostModelObjective
+from repro.core.objective import CostModelObjective, Objective
 from repro.core.space import Workload, build_space
 from repro.tuning.ml.dataset import suite_workloads, sweep_workload
 from repro.tuning.ml.forest import ModelBundle
@@ -70,7 +70,7 @@ def evaluate_model(bundle: ModelBundle,
     """Per-workload + aggregate accuracy of the deployed decision rule."""
     workloads = list(workloads) if workloads is not None \
         else suite_workloads("holdout")
-    objective = objective or TPUCostModelObjective()
+    objective = objective or CostModelObjective()
     strategy = MLStrategy(model=bundle)
     rows: List[Dict] = []
     for wl in workloads:

@@ -53,7 +53,8 @@ from repro.core.analytical import AnalyticalTuner, score
 from repro.core.bayesian import TuneResult
 from repro.core.objective import Measurement, Objective, PENALTY_TIME
 from repro.core.space import Config, SearchSpace, Workload, build_space
-from repro.tuning.sweep import SweepJournal, config_key
+from repro.tuning.sweep import (SweepJournal, append_journal_lines,
+                                config_key)
 
 # A StepTimer is any zero-arg callable returning monotonic seconds —
 # ``time.perf_counter`` in production, a fake clock in tests.  The serving
@@ -278,8 +279,11 @@ class TraceRecorder:
     def add(self, cfg: Config, t: float) -> None:
         line = json.dumps({"k": config_key(cfg), "cfg": dict(cfg),
                            "t": float(t)}, sort_keys=True)
-        with open(self.path, "a") as f:
-            f.write(line + "\n")
+        # the sweep journal's O_APPEND helper: a single unbuffered write
+        # per record, so a recorder killed mid-append leaves one torn line
+        # (skipped by load) instead of a buffered multi-line tear, and
+        # concurrent recorders never interleave mid-line
+        append_journal_lines(self.path, [line])
         self.records += 1
 
 

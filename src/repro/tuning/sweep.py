@@ -53,6 +53,73 @@ JOURNAL_VERSION = 3
 # pass an explicit top_k
 DEFAULT_TOP_K = 64
 
+# the journal header contract, flattened (nested workload fields appear as
+# "workload.<field>").  ``repro.analysis`` fingerprints this list against
+# JOURNAL_VERSION: changing the header layout without bumping the version
+# silently orphans every journal on disk, so the lint gate catches it.
+HEADER_FIELDS = ("kind", "version", "workload.key", "workload.op",
+                 "workload.n", "workload.batch", "workload.dtype",
+                 "workload.variant", "objective", "profile", "space_size",
+                 "pruned")
+
+
+def make_header(wl: Workload, objective: Objective, space_size: int,
+                pruned: int = 0) -> Dict:
+    """The version-stamped journal header record (one per journal file).
+
+    The single construction site for the ``HEADER_FIELDS`` contract;
+    ``space_size`` is the FULL valid-space size — a pruned sweep records
+    how much it dropped so journal consumers (dataset export) can tell
+    "complete enumeration" from "model-steered subset".
+    """
+    return {"kind": "header", "version": JOURNAL_VERSION,
+            "workload": {"key": wl.key, "op": wl.op, "n": wl.n,
+                         "batch": wl.batch, "dtype": wl.dtype,
+                         "variant": wl.variant},
+            "objective": objective.signature(),
+            # device the times were measured on (None for objectives
+            # that carry no hardware model, e.g. wallclock runners)
+            "profile": getattr(getattr(objective, "spec", None),
+                               "name", None),
+            "space_size": space_size,
+            "pruned": int(pruned)}
+
+
+def append_journal_lines(path: str, lines) -> None:
+    """Crash-tolerant JSONL append: the one sanctioned way to extend a
+    journal or trace file.
+
+    The whole payload goes through a single ``os.write`` on an
+    ``O_APPEND`` descriptor, so concurrent writers never interleave
+    mid-line and a killed writer leaves at most one torn trailing line —
+    which every loader skips.  If a previous writer died mid-line, the
+    torn tail is terminated first so none of this payload's records are
+    glued onto it.
+    """
+    payload = "".join(line + "\n" for line in lines).encode()
+    if not payload:
+        return
+    if _tail_torn(path):
+        # appending directly would glue our first record onto the torn
+        # bytes and lose BOTH lines to the json parse
+        payload = b"\n" + payload
+    fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+    try:
+        os.write(fd, payload)
+    finally:
+        os.close(fd)
+
+
+def _tail_torn(path: str) -> bool:
+    """True when the file ends mid-line (a writer was killed inside its
+    os.write) — the next append must not extend that line."""
+    try:
+        with open(path, "rb") as f:
+            f.seek(-1, os.SEEK_END)
+            return f.read(1) != b"\n"
+    except (OSError, ValueError):   # absent or empty file
+        return False
+
 
 def config_key(cfg: Config) -> str:
     """Canonical, order-independent identity of a config inside one space."""
@@ -237,20 +304,7 @@ class SweepJournal:
             # non-empty but headerless (e.g. the very first os.write was
             # torn): unusable — quarantine and re-journal from scratch
             self._quarantine()
-        # space_size is the FULL valid-space size; a pruned sweep records
-        # how much it dropped so journal consumers (dataset export) can
-        # tell "complete enumeration" from "model-steered subset"
-        header = {"kind": "header", "version": JOURNAL_VERSION,
-                  "workload": {"key": wl.key, "op": wl.op, "n": wl.n,
-                               "batch": wl.batch, "dtype": wl.dtype,
-                               "variant": wl.variant},
-                  "objective": objective.signature(),
-                  # device the times were measured on (None for objectives
-                  # that carry no hardware model, e.g. wallclock runners)
-                  "profile": getattr(getattr(objective, "spec", None),
-                                     "name", None),
-                  "space_size": space_size,
-                  "pruned": int(pruned)}
+        header = make_header(wl, objective, space_size, pruned)
         self._append_lines([json.dumps(header, sort_keys=True)])
 
     def append(self, wl: Workload, objective: Objective, space_size: int,
@@ -272,30 +326,7 @@ class SweepJournal:
         return json.dumps(rec, sort_keys=True)
 
     def _append_lines(self, lines) -> None:
-        payload = "".join(line + "\n" for line in lines).encode()
-        if not payload:
-            return
-        if self._tail_torn():
-            # a previous writer died mid-line: appending directly would glue
-            # our first record onto the torn bytes and lose BOTH lines to
-            # the json parse. Terminate the torn line first — load() skips
-            # it, and every entry in this payload stays parseable.
-            payload = b"\n" + payload
-        fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
-        try:
-            os.write(fd, payload)
-        finally:
-            os.close(fd)
-
-    def _tail_torn(self) -> bool:
-        """True when the journal ends mid-line (a writer was killed inside
-        its os.write) — the next append must not extend that line."""
-        try:
-            with open(self.path, "rb") as f:
-                f.seek(-1, os.SEEK_END)
-                return f.read(1) != b"\n"
-        except (OSError, ValueError):   # absent or empty file
-            return False
+        append_journal_lines(self.path, lines)
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,6 @@ import zlib
 from typing import Callable, Sequence, Tuple
 
 import numpy as np
-import pytest
 
 try:    # optional dep — the property suites importorskip it themselves
     from hypothesis import HealthCheck, settings

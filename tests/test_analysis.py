@@ -1,0 +1,335 @@
+"""repro.analysis: AST lint rules, fingerprints, invariants, baseline.
+
+Three layers (docs/analysis.md):
+
+  * per-rule good/bad snippets through ``lint_source`` — every rule must
+    both fire on its target pattern and stay silent on the sanctioned
+    alternative;
+  * version-drift fingerprints — a contract edit without a version bump
+    is a finding, a bump without a fixture refresh is a different one;
+  * semantic invariants — every plan invariant holds for every
+    ``known_ops()`` op under every registered profile, and the dead-knob
+    detector rediscovers the pruned attention ``unroll`` when a fixture
+    space reintroduces it;
+
+plus the self-clean gate: the shipped tree, checked against the shipped
+(empty) baseline, produces zero findings.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.analysis import (
+    apply_baseline,
+    check_fingerprints,
+    check_invariants,
+    check_space,
+    current_fingerprints,
+    default_fixture_path,
+    find_dead_knobs,
+    lint_source,
+    load_baseline,
+    report_dict,
+    run_lint,
+    suite_grid,
+    write_fingerprints,
+)
+from repro.analysis.findings import Finding
+from repro.core.space import ParamSpec, SearchSpace, Workload, build_space
+from repro.hw.profiles import TPU_V5E, profiles
+from repro.tuning.registry import known_ops
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def lint_rule(relpath, source, rule):
+    """Findings of one rule for one snippet."""
+    return [f for f in lint_source(relpath, source, rules=[rule])
+            if f.rule == f"ast.{rule}"]
+
+
+# ---------------------------------------------------------------------------
+# AST rules: each fires on the bad snippet, stays silent on the good one
+# ---------------------------------------------------------------------------
+
+class TestAstRules:
+    def test_retired_shim_import(self):
+        bad = "import repro.core.tuner\n"
+        assert lint_rule("x.py", bad, "retired-shim-import")
+        bad = "from repro.hw.tpu import TPU_SPEC\n"
+        assert lint_rule("x.py", bad, "retired-shim-import")
+        good = "from repro.core.space import build_space\n"
+        assert not lint_rule("x.py", good, "retired-shim-import")
+
+    def test_deprecated_alias(self):
+        bad = "from repro.core import TPUCostModelObjective\n"
+        assert lint_rule("tuning/x.py", bad, "deprecated-alias")
+        bad = "obj = objective.TPUCostModelObjective()\n"
+        assert lint_rule("tuning/x.py", bad, "deprecated-alias")
+        # the definition site and the compat re-export stay importable
+        assert not lint_rule("core/objective.py", bad, "deprecated-alias")
+        good = "from repro.core import CostModelObjective\n"
+        assert not lint_rule("tuning/x.py", good, "deprecated-alias")
+
+    def test_deprecated_spec_kwarg(self):
+        bad = "space = build_space(wl, spec=profile)\n"
+        assert lint_rule("x.py", bad, "deprecated-spec-kwarg")
+        good = "space = build_space(wl, profile=profile)\n"
+        assert not lint_rule("x.py", good, "deprecated-spec-kwarg")
+        # functions whose canonical parameter IS `spec` are not targeted
+        good = "t = micro_step_overhead_s(spec=profile)\n"
+        assert not lint_rule("x.py", good, "deprecated-spec-kwarg")
+
+    def test_raw_clock_scoped_to_measurement_paths(self):
+        bad = "import time\nt0 = time.time()\n"
+        assert lint_rule("tuning/x.py", bad, "raw-clock")
+        assert lint_rule("serve/engine.py", bad, "raw-clock")
+        assert lint_rule("launch/serve.py", bad, "raw-clock")
+        # non-measurement paths may use wall clocks (e.g. launch/dryrun.py)
+        assert not lint_rule("launch/dryrun.py", bad, "raw-clock")
+        bad = "from time import perf_counter\ndt = perf_counter() - t0\n"
+        assert lint_rule("tuning/x.py", bad, "raw-clock")
+        # references without a call (e.g. storing the injectable default)
+        good = "import time\nclock = time.monotonic\n"
+        assert not lint_rule("tuning/x.py", good, "raw-clock")
+
+    def test_objective_batch_eval(self):
+        bad = ("class FancyObjective(Objective):\n"
+               "    def batch_eval(self, space, cfgs):\n"
+               "        return []\n")
+        assert lint_rule("x.py", bad, "objective-batch-eval")
+        good = ("class FancyObjective(Objective):\n"
+                "    def batch_eval_metrics(self, space, cfgs):\n"
+                "        return []\n"
+                "    def batch_eval(self, space, cfgs):\n"
+                "        return []\n")
+        assert not lint_rule("x.py", good, "objective-batch-eval")
+        # unrelated base classes are not objectives
+        other = ("class Helper(Base):\n"
+                 "    def batch_eval(self):\n"
+                 "        return []\n")
+        assert not lint_rule("x.py", other, "objective-batch-eval")
+
+    def test_mutable_default(self):
+        assert lint_rule("x.py", "def f(x=[]):\n    pass\n",
+                         "mutable-default")
+        assert lint_rule("x.py", "def f(x={}):\n    pass\n",
+                         "mutable-default")
+        assert lint_rule("x.py", "def f(*, x=dict()):\n    pass\n",
+                         "mutable-default")
+        assert not lint_rule("x.py", "def f(x=None):\n    pass\n",
+                             "mutable-default")
+        assert not lint_rule("x.py", "def f(x=()):\n    pass\n",
+                             "mutable-default")
+
+    def test_journal_open_append(self):
+        assert lint_rule("x.py", "f = open(p, 'a')\n",
+                         "journal-open-append")
+        assert lint_rule("x.py", "f = open(p, mode='ab')\n",
+                         "journal-open-append")
+        assert not lint_rule("x.py", "f = open(p)\n", "journal-open-append")
+        assert not lint_rule("x.py", "f = open(p, 'w')\n",
+                             "journal-open-append")
+        # the O_APPEND helper itself goes through os.open
+        assert not lint_rule("x.py", "fd = os.open(p, flags)\n",
+                             "journal-open-append")
+
+    def test_allow_comment_suppresses_one_line(self):
+        src = "t0 = time.time()  # lint: allow[raw-clock]\nt1 = time.time()\n"
+        hits = lint_rule("tuning/x.py", src, "raw-clock")
+        assert [f.line for f in hits] == [2]
+
+    def test_syntax_error_is_a_finding(self):
+        hits = lint_source("x.py", "def f(:\n")
+        assert rules_of(hits) == ["ast.syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# Findings / baseline mechanics
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    def test_key_is_line_independent(self):
+        a = Finding(rule="r", path="p", message="m", line=3)
+        b = Finding(rule="r", path="p", message="m", line=99)
+        assert a.key() == b.key()
+        assert a.key() != dataclasses.replace(a, message="other").key()
+
+    def test_apply_baseline_splits(self):
+        a = Finding(rule="r", path="p", message="m")
+        b = Finding(rule="r", path="p", message="other")
+        fresh, quiet = apply_baseline([a, b], [a.key()])
+        assert fresh == [b] and quiet == [a]
+
+    def test_report_dict_counts(self):
+        a = Finding(rule="r1", path="p", message="m")
+        b = Finding(rule="r1", path="p", message="o")
+        rep = report_dict([a, b], suppressed=[])
+        assert rep["total"] == 2 and rep["counts"] == {"r1": 2}
+        assert all("key" in f for f in rep["findings"])
+
+    def test_load_baseline(self, tmp_path):
+        p = tmp_path / "b.json"
+        p.write_text(json.dumps({"version": 1, "suppress": ["k"]}))
+        assert load_baseline(str(p)) == ["k"]
+        assert load_baseline(str(tmp_path / "absent.json")) == []
+        p.write_text(json.dumps({"oops": []}))
+        with pytest.raises(ValueError):
+            load_baseline(str(p))
+
+    def test_shipped_baseline_is_empty(self):
+        path = os.path.join(os.path.dirname(default_fixture_path()),
+                            "analysis_baseline.json")
+        assert load_baseline(path) == []
+
+
+# ---------------------------------------------------------------------------
+# Version-drift fingerprints
+# ---------------------------------------------------------------------------
+
+class TestFingerprints:
+    def test_shipped_fixture_matches_live_tree(self):
+        assert check_fingerprints(default_fixture_path()) == []
+
+    def test_missing_fixture(self, tmp_path):
+        hits = check_fingerprints(str(tmp_path / "absent.json"))
+        assert rules_of(hits) == ["fingerprint.missing-fixture"]
+
+    def test_content_change_without_version_bump(self, monkeypatch):
+        import repro.tuning.ml.features as feats
+        monkeypatch.setattr(feats, "FEATURE_NAMES",
+                            tuple(feats.FEATURE_NAMES) + ("sneaky_col",))
+        hits = check_fingerprints(default_fixture_path())
+        assert rules_of(hits) == ["fingerprint.feature_columns"]
+        assert "bump the matching *_VERSION" in hits[0].message
+
+    def test_version_bump_with_stale_fixture(self, monkeypatch):
+        import repro.tuning.ml.features as feats
+        monkeypatch.setattr(feats, "FEATURE_NAMES",
+                            tuple(feats.FEATURE_NAMES) + ("sneaky_col",))
+        monkeypatch.setattr(feats, "FEATURE_VERSION",
+                            feats.FEATURE_VERSION + 1)
+        hits = check_fingerprints(default_fixture_path())
+        assert rules_of(hits) == ["fingerprint.feature_columns"]
+        assert "stale" in hits[0].message
+
+    def test_write_then_check_roundtrip(self, tmp_path):
+        p = str(tmp_path / "fp.json")
+        pins = write_fingerprints(p)
+        assert pins == current_fingerprints()
+        assert check_fingerprints(p) == []
+
+    def test_unknown_pinned_contract(self, tmp_path):
+        p = str(tmp_path / "fp.json")
+        pins = write_fingerprints(p)
+        pins["phlogiston"] = {"version": 1, "hash": "0" * 64}
+        with open(p, "w") as f:
+            json.dump(pins, f)
+        hits = check_fingerprints(p)
+        assert rules_of(hits) == ["fingerprint.phlogiston"]
+
+
+# ---------------------------------------------------------------------------
+# Semantic invariants
+# ---------------------------------------------------------------------------
+
+class TestInvariants:
+    def test_all_ops_all_profiles_clean(self):
+        # the acceptance sweep: every plan invariant, model agreement,
+        # and feasibility check for every op x profile x suite workload
+        assert check_invariants() == []
+
+    def test_suite_grid_covers_every_op(self):
+        for op in known_ops():
+            grid = suite_grid(op)
+            assert grid, op
+            assert all(wl.op == op for wl in grid)
+
+    def test_profiles_registry_has_three(self):
+        assert {"tpu_v5e", "gpu_sm", "cpu_interpret"} <= set(profiles())
+
+    def test_empty_space_is_a_finding(self):
+        wl = Workload(op="attention", n=2048, batch=64, dtype="bfloat16",
+                      variant="flash")
+        base = build_space(wl, TPU_V5E)
+        empty = SearchSpace(wl, base.params,
+                            constraints=(lambda c, w: False,), spec=TPU_V5E)
+        hits = check_space(empty)
+        assert rules_of(hits) == ["invariant.empty-space"]
+
+    def test_dead_knob_detector_finds_reintroduced_unroll(self):
+        # PR 5 pruned `unroll` from the linrec space and this PR pruned it
+        # from attention; the detector must rediscover that class of bug
+        # when a fixture space sneaks the knob back in
+        spaces = []
+        for wl in suite_grid("attention"):
+            base = build_space(wl, TPU_V5E)
+            spaces.append(SearchSpace(
+                base.workload,
+                list(base.params) + [ParamSpec("unroll", (1, 2))],
+                constraints=base.constraints, spec=base.spec))
+        dead = find_dead_knobs(spaces)
+        assert "unroll" in dead
+        # the live block knobs must NOT be reported dead
+        assert "block_q" not in dead and "block_k" not in dead
+
+    def test_shipped_spaces_have_no_dead_knobs(self):
+        # subsumed by test_all_ops_all_profiles_clean but pinned
+        # explicitly: the per-op aggregate liveness sweep is the contract
+        for op in ("attention", "scan"):
+            spaces = [build_space(wl, TPU_V5E) for wl in suite_grid(op)]
+            assert find_dead_knobs(spaces) == []
+
+
+# ---------------------------------------------------------------------------
+# Self-clean gate + CLI
+# ---------------------------------------------------------------------------
+
+class TestSelfClean:
+    def test_full_lint_is_clean(self):
+        # AST lint + fingerprints + full invariant sweep over the shipped
+        # tree: zero findings, matching the empty shipped baseline
+        assert run_lint() == []
+
+    def test_cli_lint_json_report(self, tmp_path, capsys):
+        from repro.launch.tune import main
+        report = tmp_path / "report.json"
+        rc = main(["lint", "--json", str(report), "--no-invariants"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "0 finding(s)" in out
+        rep = json.loads(report.read_text())
+        assert rep["total"] == 0 and rep["version"] == 1
+
+    def test_cli_lint_fails_on_finding(self, tmp_path, capsys):
+        # point the AST lint at a tree with a violation: non-zero exit,
+        # finding in the report
+        from repro.launch.tune import main
+        pkg = tmp_path / "pkg"
+        pkg.mkdir()
+        (pkg / "bad.py").write_text("import repro.core.tuner\n")
+        report = tmp_path / "report.json"
+        rc = main(["lint", "--root", str(pkg), "--json", str(report),
+                   "--no-invariants"])
+        assert rc == 1
+        rep = json.loads(report.read_text())
+        assert rep["counts"].get("ast.retired-shim-import") == 1
+
+    def test_cli_baseline_suppresses(self, tmp_path, capsys):
+        from repro.launch.tune import main
+        pkg = tmp_path / "pkg"
+        pkg.mkdir()
+        (pkg / "bad.py").write_text("import repro.core.tuner\n")
+        hits = [f for f in run_lint(pkg_root=str(pkg), invariants=False)
+                if f.rule.startswith("ast.")]
+        baseline = tmp_path / "baseline.json"
+        baseline.write_text(json.dumps(
+            {"version": 1, "suppress": [f.key() for f in hits]}))
+        rc = main(["lint", "--root", str(pkg), "--baseline", str(baseline),
+                   "--no-invariants"])
+        assert rc == 0
+        assert "1 baselined" in capsys.readouterr().out

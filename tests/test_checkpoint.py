@@ -1,5 +1,4 @@
 """Checkpoint manager: roundtrip, corruption, pruning, auto-resume."""
-import json
 import os
 
 import jax.numpy as jnp

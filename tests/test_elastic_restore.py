@@ -1,7 +1,6 @@
 """Elastic scaling: a checkpoint written under one device layout restores
 into a different (shrunken) layout — global shapes are layout-invariant."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch

@@ -1,7 +1,7 @@
 """Fault-tolerance logic with simulated clocks/failures."""
 import pytest
 
-from repro.train.fault import (ElasticPlan, FaultInjector, HeartbeatWatchdog,
+from repro.train.fault import (FaultInjector, HeartbeatWatchdog,
                                StragglerDetector, plan_elastic_remesh)
 
 

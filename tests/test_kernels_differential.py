@@ -7,7 +7,6 @@ session-resolution pipeline (analytical prior -> per-op normalizer ->
 launch-geometry fitting) has to survive shapes the tuner never saw:
 prime batches, non-power-of-two lengths.
 """
-import pytest
 from conftest import kernel_ops_entries
 
 

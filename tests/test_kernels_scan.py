@@ -4,7 +4,6 @@ import pytest
 
 pytest.importorskip("hypothesis")  # optional dep: property tests
 import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import TPUCostModelObjective, Workload, build_space
-from repro.core.objective import Measurement, Objective
+from repro.core.objective import Objective
 from repro.tuning.ml import (FEATURE_NAMES, MLStrategy, ModelArtifactError,
                              ModelBundle, N_FEATURES, build_dataset,
                              check_floors, dataset_from_db, evaluate_model,

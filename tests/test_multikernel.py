@@ -1,5 +1,4 @@
 """Large-problem multi-pass tuning (paper §IV-C)."""
-import pytest
 
 from repro.core import Workload, build_space, BayesianTuner, CachedObjective
 from repro.core.multikernel import (MultiPassObjective, analytical_multipass,

@@ -4,10 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optim import (adafactor, adamw, clip_by_global_norm, constant,
+from repro.optim import (adafactor, adamw, clip_by_global_norm,
                          global_norm, warmup_cosine)
 from repro.optim.compression import (compress, decompress, ef_roundtrip,
-                                     init_error, psum_compressed)
+                                     psum_compressed)
 
 
 def _quadratic_descends(make_opt):

@@ -15,7 +15,7 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core import TPUCostModelObjective, Workload, build_space
+from repro.core import Workload, build_space
 from repro.core.objective import (MEASUREMENT_VERSION, METRIC_ENERGY,
                                   METRIC_PEAK_VMEM, METRIC_TIME,
                                   PENALTY_TIME, CostModelObjective,

@@ -149,7 +149,9 @@ def test_online_tuner_attached_to_engine(small_model, tmp_path):
     from repro.tuning.sweep import config_key
 
     cfg, model, params = small_model
-    wl = Workload(op="attention", n=128, batch=2, variant="flash")
+    # n=256 keeps the space multi-config (block_q/block_k in {128, 256});
+    # at n=128 every block knob is pinned and there is no trial to run
+    wl = Workload(op="attention", n=256, batch=2, variant="flash")
     session = TunerSession(db_path=str(tmp_path / "serve_db.json"))
     prior = session.resolve_raw(wl)
     fast = ranked_candidates(build_space(wl), 1,

@@ -1,7 +1,5 @@
 """Sharding-rules engine against an abstract production mesh."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs.base import get_arch

@@ -1,13 +1,10 @@
 """The three tuning methodologies + TuningDB (paper core behaviours)."""
-import os
-
-import numpy as np
 import pytest
 
 from repro.core import (AnalyticalTuner, BayesianTuner, CachedObjective,
                         ExhaustiveSearch, RandomSearch, TPUCostModelObjective,
                         TuningDB, Workload, build_space)
-from repro.core.objective import Measurement, PENALTY_TIME
+from repro.core.objective import PENALTY_TIME
 
 
 def _space(n=512, batch=2**17, op="scan", variant="lf"):
@@ -42,7 +39,7 @@ def test_bayesian_beats_random_at_equal_budget():
     wins, total = 0, 0
     for n in [256, 512, 1024]:
         space = _space(n=n)
-        ex = ExhaustiveSearch().tune(
+        ExhaustiveSearch().tune(
             space, CachedObjective(TPUCostModelObjective(noise=0.02)))
         for seed in range(3):
             bo = BayesianTuner(seed=seed, max_evals=20).tune(
