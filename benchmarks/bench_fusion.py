@@ -1,0 +1,160 @@
+"""Chain-fusion gate: the fused chain must actually be cheaper.
+
+For each production chain (docs/kernels.md — *Chain fusion*) this bench
+runs the public op fused (``fuse=1``) and unfused (``fuse=0``) on the
+same inputs and emits, per arm:
+
+* the **planned HBM pass count** (``plan_for_chain(...).plan.passes`` —
+  the same chain-aware quantity journals and the analytical ``pass_rank``
+  consume) plus the executed Pallas launch count from
+  ``driver.capture_launches`` (conformance: must equal the chain's);
+* the **measured wall clock** (median of repeated blocked calls).
+
+Gates:
+
+* both chains: fused planned passes < unfused planned passes, and the
+  executed launch list equals the chain plan's;
+* rglru: fused wall clock strictly beats unfused — the saved XLA gate
+  pass is real measured time, not just model accounting.  (ssd's wall
+  clock is emitted ungated: in CPU interpret mode the intra kernel
+  dominates both arms, so the 3 -> 2 launch win is asserted on the pass
+  rows where it is deterministic.)
+
+Standalone (the CI bench-smoke invocation):
+
+  PYTHONPATH=src:. python benchmarks/bench_fusion.py \
+      --smoke --seed 0 --json BENCH_fusion.json
+
+exits non-zero when a gate fails; ``run.py --only fusion`` emits the
+same rows as a section.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+
+def _median_s(fn, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())          # warm (compile + caches)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run(emit, seed: int = 0, smoke: bool = False) -> List[str]:
+    """Emit fused-vs-unfused rows per chain; returns gate failures."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.space import Workload
+    from repro.kernels.blocks import driver
+    from repro.kernels.blocks.plan import plan_for_chain
+    from repro.kernels.rglru.ops import rglru
+    from repro.kernels.ssd.ops import ssd
+
+    rng = np.random.default_rng(seed)
+    reps = 5 if smoke else 9
+    failures: List[str] = []
+
+    def measure(op, wl, cfg, fn, dims=None):
+        chain = plan_for_chain(wl, cfg, dims=dims)
+        with driver.capture_launches() as rec:
+            fn()
+        conforms = tuple(rec) == tuple(chain.launches)
+        t = _median_s(fn, reps)
+        fuse = cfg["fuse"]
+        emit(f"fusion,{op},{wl.n},{wl.batch},passes_fuse{fuse},count,"
+             f"{chain.plan.passes},launches={len(rec)}")
+        emit(f"fusion,{op},{wl.n},{wl.batch},time_fuse{fuse},seconds,"
+             f"{t:.5f},median_of_{reps}")
+        if not conforms:
+            failures.append(
+                f"{op} fuse={fuse}: executed launch list diverged from "
+                f"the chain plan ({len(rec)} executed vs "
+                f"{len(chain.launches)} planned)")
+        return chain.plan.passes, t
+
+    # --- ssd: intra -> linrec -> apply ---------------------------------
+    B, L, H, P, S = (2, 512, 2, 16, 8) if smoke else (4, 1024, 2, 16, 8)
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.85, 0.999, (B, L, H)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, L, S)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((B, L, S)) * 0.3, jnp.float32)
+    wl = Workload(op="ssd", n=L, batch=B * H, variant="chunked")
+    res = {}
+    for fuse in (0, 1):
+        cfg = {"tile_n": 128, "radix": 2, "fuse": fuse}
+        res[fuse] = measure(
+            "ssd", wl, cfg,
+            lambda cfg=cfg: ssd(x, a, b, c, config=cfg, interpret=True,
+                                use_pallas=True),
+            dims=(S, P))
+    if not res[1][0] < res[0][0]:
+        failures.append(
+            f"ssd fused chain does not save an HBM pass "
+            f"({res[1][0]} vs {res[0][0]})")
+
+    # --- rglru: gate -> linrec -----------------------------------------
+    B2, L2, D = (2, 512, 16) if smoke else (4, 1024, 32)
+    a2 = jnp.asarray(rng.uniform(0.8, 0.99, (B2, L2, D)), jnp.float32)
+    u2 = jnp.asarray(rng.standard_normal((B2, L2, D)), jnp.float32)
+    wl2 = Workload(op="rglru", n=L2, batch=B2 * D)
+    res2 = {}
+    for fuse in (0, 1):
+        cfg = {"tile_n": 256, "rows_per_program": 8, "radix": 2,
+               "fuse": fuse}
+        res2[fuse] = measure(
+            "rglru", wl2, cfg,
+            lambda cfg=cfg: rglru(a2, u2, config=cfg, interpret=True,
+                                  use_pallas=True))
+    if not res2[1][0] < res2[0][0]:
+        failures.append(
+            f"rglru fused chain does not save an HBM pass "
+            f"({res2[1][0]} vs {res2[0][0]})")
+    if not res2[1][1] < res2[0][1]:
+        failures.append(
+            f"rglru fused chain is not faster on wall clock "
+            f"({res2[1][1]:.5f}s fused vs {res2[0][1]:.5f}s unfused) — "
+            f"the folded gate should drop a whole elementwise pass")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fused-vs-unfused chain gate (pass count + wall clock)")
+    ap.add_argument("--json", default=None,
+                    help="write rows + gate verdict here "
+                         "(e.g. BENCH_fusion.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller shapes / fewer timing reps")
+    args = ap.parse_args(argv)
+
+    rows: List[str] = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    failures = run(emit, seed=args.seed, smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "fusion", "seed": args.seed,
+                       "smoke": bool(args.smoke), "rows": rows,
+                       "failures": failures}, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    for failure in failures:
+        print(f"[bench-fusion] FAIL: {failure}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,7 +19,11 @@ Prints ``name,...`` CSV rows:
   analysis            — static-analysis pass timing per stage
       (the BENCH_analysis gate: the full zero-execution lint — AST rules,
       fingerprints, op x profile invariants — must finish under 10 s and
-      come back clean).
+      come back clean);
+  fusion              — fused vs unfused chain execution per chain
+      (the BENCH_fusion gate: the fused arm must save a planned HBM pass
+      on both chains, conform to its chain plan's launch list, and beat
+      unfused wall clock on rglru).
 
 ``--seed`` flows into every stochastic section so CI runs are
 reproducible; ``--json-dir`` writes one BENCH_<SECTION>.json per section
@@ -39,7 +43,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
                          "resolve,blocks,sweep,ml_predict,online,transfer,"
-                         "pareto,analysis")
+                         "pareto,analysis,fusion")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -101,6 +105,9 @@ def main() -> None:
         from benchmarks.bench_analysis import run as run_analysis
         gate_failures += run_analysis(emit, seed=args.seed,
                                       smoke=args.smoke)
+    if begin("fusion"):
+        from benchmarks.bench_fusion import run as run_fusion
+        gate_failures += run_fusion(emit, seed=args.seed, smoke=args.smoke)
 
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)

@@ -183,8 +183,13 @@ def multipass_scan_add(x: jax.Array, plan: StagePlan, *, unroll: int = 1,
                               interpret=interpret)
     sums = y_local[:, -1].reshape(batch, p)
     record_launch(l2)
+    # the carry scan's tile is the CHUNK COUNT p, not tile_n: the
+    # workload-tuned unroll was fit to tile_n and can exceed p when the
+    # plan was built with a small seq_limit — clamp to the l2 launch
+    # record's own tile so the balanced-tree fold never outgrows it
     csums = scan_add_pallas(sums, rows_per_program=l2.block_shape[0],
-                            tile_n=p, stages=l2.stages, unroll=unroll,
+                            tile_n=p, stages=l2.stages,
+                            unroll=max(1, min(unroll, l2.block_shape[1])),
                             interpret=interpret)
     entry = jnp.pad(csums[:, :-1], ((0, 0), (1, 0))).reshape(batch * p, 1)
     record_launch(l3)
@@ -194,9 +199,15 @@ def multipass_scan_add(x: jax.Array, plan: StagePlan, *, unroll: int = 1,
 
 
 def multipass_linrec(a: jax.Array, b: jax.Array, plan: StagePlan, *,
+                     gate: bool = False,
                      interpret: bool = False) -> jax.Array:
     """h_t = a_t h_{t-1} + b_t as three kernels: per-chunk linrec (+ the
-    chunk transfer operators), carry linrec over operators, apply."""
+    chunk transfer operators), carry linrec over operators, apply.
+
+    ``gate=True`` is the fused rglru chain: ``b`` carries the raw input u
+    and the chunk kernel applies the RG-LRU gate in-tile (the carry and
+    apply launches operate on transfer operators, untouched by the gate).
+    """
     from repro.kernels.scan.kernel import (scan_linrec_pallas,
                                            scan_linrec_prod_pallas)
     l1, l2, l3 = plan.launches
@@ -210,7 +221,7 @@ def multipass_linrec(a: jax.Array, b: jax.Array, plan: StagePlan, *,
     record_launch(l1)
     h_local, a_cum = scan_linrec_prod_pallas(
         ac, bc, rows_per_program=l1.block_shape[0], stages=l1.stages,
-        interpret=interpret)
+        gate=gate, interpret=interpret)
     # chunk transfer operator: state_out = A * state_in + B
     A = a_cum[:, -1].reshape(batch, p)
     B = h_local[:, -1].reshape(batch, p)

@@ -46,11 +46,16 @@ def _scan_add_kernel(x_ref, o_ref, carry_ref, *, stages: Tuple[int, ...],
 
 def _scan_linrec_kernel(a_ref, b_ref, h_ref, carry_ref, *,
                         stages: Tuple[int, ...], multi_tile: bool,
+                        gate: bool = False,
                         want_products: bool = False, p_ref=None):
     if multi_tile:
         prim.carry_init(carry_ref)
     aa = a_ref[...].astype(jnp.float32)
     bb = b_ref[...].astype(jnp.float32)
+    if gate:
+        # fused rglru chain: b_ref holds u; the elementwise gate runs as
+        # the stage loop's prologue instead of a separate XLA HBM pass
+        bb = prim.rglru_gate(aa, bb)
     for fan_in, stride in zip(stages, stage_strides(stages)):
         aa, bb = prim.linrec_level(aa, bb, fan_in, stride)
     # aa now holds prefix products of a; bb the zero-state response
@@ -64,9 +69,10 @@ def _scan_linrec_kernel(a_ref, b_ref, h_ref, carry_ref, *,
 
 
 def _linrec_prod_kernel(a_ref, b_ref, h_ref, p_ref, carry_ref, *,
-                        stages: Tuple[int, ...], multi_tile: bool):
+                        stages: Tuple[int, ...], multi_tile: bool,
+                        gate: bool = False):
     _scan_linrec_kernel(a_ref, b_ref, h_ref, carry_ref, stages=stages,
-                        multi_tile=multi_tile, want_products=True,
+                        multi_tile=multi_tile, gate=gate, want_products=True,
                         p_ref=p_ref)
 
 
@@ -115,12 +121,18 @@ def scan_add_pallas(x: jax.Array, *, rows_per_program: int = 8,
 
 @functools.partial(jax.jit, static_argnames=("rows_per_program", "tile_n",
                                              "radix", "unroll", "stages",
-                                             "interpret"))
+                                             "gate", "interpret"))
 def scan_linrec_pallas(a: jax.Array, b: jax.Array, *, rows_per_program: int = 8,
                        tile_n: int = 0, radix: int = 2, unroll: int = 1,
                        stages: Optional[Tuple[int, ...]] = None,
+                       gate: bool = False,
                        interpret: bool = False) -> jax.Array:
-    """h_t = a_t * h_{t-1} + b_t along the last axis of (batch, n) pairs."""
+    """h_t = a_t * h_{t-1} + b_t along the last axis of (batch, n) pairs.
+
+    ``gate=True`` is the fused rglru chain link: ``b`` carries the raw
+    input ``u`` and the kernel applies the RG-LRU gate in-tile before the
+    stage loop (one launch for the whole gate→linrec chain).
+    """
     del unroll  # fold order fixed by composition order for linrec
     batch, n = a.shape
     tile_n = tile_n or n
@@ -128,7 +140,7 @@ def scan_linrec_pallas(a: jax.Array, b: jax.Array, *, rows_per_program: int = 8,
         batch, n, rows_per_program, tile_n, 2)
     kernel = functools.partial(
         _scan_linrec_kernel, stages=_resolve_stages(stages, tile_n, radix),
-        multi_tile=True)
+        multi_tile=True, gate=gate)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -143,16 +155,18 @@ def scan_linrec_pallas(a: jax.Array, b: jax.Array, *, rows_per_program: int = 8,
 
 
 @functools.partial(jax.jit, static_argnames=("rows_per_program", "radix",
-                                             "stages", "interpret"))
+                                             "stages", "gate", "interpret"))
 def scan_linrec_prod_pallas(a: jax.Array, b: jax.Array, *,
                             rows_per_program: int = 8, radix: int = 2,
                             stages: Optional[Tuple[int, ...]] = None,
+                            gate: bool = False,
                             interpret: bool = False):
     """Single-tile linrec returning (h, prefix products of a).
 
     The multi-pass driver's chunk kernel: each program holds whole rows
     (tile_n == n), so no carry chain — the products output is exactly the
-    per-chunk transfer operator the carry scan then composes.
+    per-chunk transfer operator the carry scan then composes.  ``gate``
+    fuses the RG-LRU input gate exactly as in ``scan_linrec_pallas``.
     """
     batch, n = a.shape
     rows = rows_per_program
@@ -160,7 +174,7 @@ def scan_linrec_prod_pallas(a: jax.Array, b: jax.Array, *,
     spec = pl.BlockSpec((rows, n), lambda i, j: (i, j))
     kernel = functools.partial(
         _linrec_prod_kernel, stages=_resolve_stages(stages, n, radix),
-        multi_tile=False)
+        multi_tile=False, gate=gate)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -9,8 +9,15 @@ Three-phase parallel form (Dao & Gu 2024, adapted to TPU tiling):
     (reuses the paper-tuned scan kernel / monoid);
   phase C (kernel): broadcast scanned entry states back into each chunk.
 
+The chain planner's ``fuse=1`` arm collapses phases B + C into
+``ssd_state_apply_pallas``: one launch whose chunk axis is sequential and
+whose (S, P) VMEM carry *is* the inter-chunk recurrence state — phase A's
+chunk states feed phase B without the HBM roundtrip, and the apply is
+folded into the same launch.
+
 Tunables: chunk length Q (the VMEM tile; tile_n in the tuning space),
-rows via the grid. Q is hardware-aligned to the 128-lane MXU edge.
+rows via the grid, and the chain-fusion boundary (``fuse``). Q is
+hardware-aligned to the 128-lane MXU edge.
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
@@ -97,6 +105,64 @@ def ssd_intra_pallas(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
         interpret=interpret,
     )(x, a, b, c)
     return y, ac, st
+
+
+def _state_apply_kernel(y_ref, a_ref, c_ref, ac_ref, st_ref, o_ref,
+                        carry_ref):
+    """Fused phases B + C: the (S, P) VMEM carry is the recurrence state.
+
+    The chunk axis is the grid's sequential dimension, so the carry
+    entering program (i, j) is exactly h_{j-1} = the scanned entry state
+    for chunk j; the kernel applies it to the chunk's output and advances
+    the recurrence h_j = a_chunk_j * h_{j-1} + state_j in VMEM.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+    ent = carry_ref[...]                     # (S, P) entry state, f32
+    y = y_ref[0].astype(jnp.float32)         # (Q, P)
+    a = a_ref[0].astype(jnp.float32)         # (Q,)
+    c = c_ref[0].astype(jnp.float32)         # (Q, S)
+    la = jnp.cumsum(jnp.log(jnp.maximum(a, 1e-30)))
+    y_in = jax.lax.dot_general(c, ent, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (Q, P)
+    o_ref[0] = (y + y_in * jnp.exp(la)[:, None]).astype(o_ref.dtype)
+    ac = ac_ref[0, 0].astype(jnp.float32)
+    st = st_ref[0, 0].astype(jnp.float32)
+    carry_ref[...] = ac * ent + st
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_state_apply_pallas(y_intra, a, c, a_chunk, state, *,
+                           chunk: int = 128, interpret: bool = False):
+    """Fused inter-chunk recurrence + apply (chain ``fuse=1``): one launch.
+
+    y_intra: (BH, L, P); a: (BH, L); c: (BH, L, S);
+    a_chunk: (BH, nc) chunk transition scalars; state: (BH, nc, S, P)
+    chunk state injections — both straight out of ``ssd_intra_pallas``.
+    Unlike the unfused phase B, odd chunk counts need no radix-space
+    fallback: the sequential carry walks any nc.
+    """
+    BH, L, P = y_intra.shape
+    S = c.shape[-1]
+    nc = L // chunk
+    return pl.pallas_call(
+        _state_apply_kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, S), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1, S, P), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, P), y_intra.dtype),
+        scratch_shapes=[pltpu.VMEM((S, P), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(y_intra, a, c, a_chunk, state)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

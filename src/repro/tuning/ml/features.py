@@ -33,13 +33,17 @@ from repro.kernels.blocks.plan import plan_for
 # the version and loading a stale one fails fast instead of mis-predicting.
 # v4: device feature columns (hardware-profile geometry/limits), so one
 # forest can pool rows measured on different profiles.
-FEATURE_VERSION = 4
+# v5: "fuse" column — the chain-fusion boundary knob (ssd/rglru chains);
+# the plan columns (log2_passes) already see its effect, the raw knob lets
+# the forest separate fusion from blocking at equal pass counts.
+FEATURE_VERSION = 5
 
 FEATURE_NAMES = (
     # workload (Input Parameters `A`)
     "log2_n", "log2_batch", "dtype_bytes", "variant_id",
     # raw knobs (Performance Parameters `B`); 0.0 when a knob is absent
     "log2_tile_n", "log2_rows", "log2_radix", "log2_unroll", "in_register",
+    "fuse",
     "log2_block_q", "log2_block_k", "log2_block_m", "log2_block_n",
     # StagePlan stack (the exact staged execution the drivers launch:
     # launches/HBM passes, stage count, carry-chain depth, raggedness,
@@ -123,6 +127,7 @@ def _encode(space: SearchSpace, cfg: Mapping[str, int]):
         "dtype_bytes": float(dtype_bytes(wl.dtype)),
         "variant_id": variant_id(wl.variant),
         "in_register": float(cfg.get("in_register", 0)),
+        "fuse": float(cfg.get("fuse", 0)),
         "log2_grid": _log2(res["grid"]),
         "log2_vmem": _log2(res["vmem"]),
         "occupancy": float(res["occupancy"]),

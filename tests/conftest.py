@@ -200,6 +200,47 @@ def _run_rglru(dtype, batch, n):
     assert_kernel_close(got, rglru_ref(a, u), dtype, scale=10.0)
 
 
+def _run_ssd_fused(dtype, batch, n):
+    """Chain-fusion differential: fuse=1 (fused state-apply launch) must
+    match both fuse=0 (phase-B through the shared linrec block) and the
+    sequential reference on the same odd/prime grid."""
+    import jax
+
+    from repro.kernels.ssd.ops import ssd
+    from repro.kernels.ssd.ref import ssd_ref
+    ks = jax.random.split(jax.random.PRNGKey(batch * 1000 + n), 4)
+    x = jax.random.normal(ks[0], (batch, n, 2, 16))
+    a = jax.random.uniform(ks[1], (batch, n, 2), minval=0.85, maxval=0.999)
+    b = jax.random.normal(ks[2], (batch, n, 8)) * 0.3
+    c = jax.random.normal(ks[3], (batch, n, 8)) * 0.3
+    cfg = {"tile_n": min(128, n), "radix": 2}
+    fused = ssd(x, a, b, c, config=dict(cfg, fuse=1), interpret=True,
+                use_pallas=True)
+    unfused = ssd(x, a, b, c, config=dict(cfg, fuse=0), interpret=True,
+                  use_pallas=True)
+    assert_kernel_close(fused, unfused, dtype, scale=10.0)
+    assert_kernel_close(fused, ssd_ref(x, a, b, c), dtype, scale=10.0)
+
+
+def _run_rglru_fused(dtype, batch, n):
+    """fuse=1 folds the gate into the scan kernel's first stage; must
+    match the unfused chain (XLA gate pass) and the oracle."""
+    import jax
+
+    from repro.kernels.rglru.ops import rglru
+    from repro.kernels.rglru.ref import rglru_ref
+    ks = jax.random.split(jax.random.PRNGKey(batch * 1000 + n), 2)
+    a = jax.random.uniform(ks[0], (batch, n, 16), minval=0.8, maxval=0.99)
+    u = jax.random.normal(ks[1], (batch, n, 16))
+    cfg = {"tile_n": min(128, n), "rows_per_program": 8, "radix": 2}
+    fused = rglru(a, u, config=dict(cfg, fuse=1), interpret=True,
+                  use_pallas=True)
+    unfused = rglru(a, u, config=dict(cfg, fuse=0), interpret=True,
+                    use_pallas=True)
+    assert_kernel_close(fused, unfused, dtype, scale=10.0)
+    assert_kernel_close(fused, rglru_ref(a, u), dtype, scale=10.0)
+
+
 def _run_prefix_sum_radix(radix):
     """Mixed-radix stage plans: the forced radix does NOT divide n, so the
     plan's ragged final stage (stage_radices) is on the execution path."""
@@ -288,7 +329,12 @@ _KERNEL_TABLE = {
     # matmul shapes: (batch*11) x 65 x n — every dim odd or prime-factored
     "matmul": (_run_matmul, ("float32", "bfloat16"), ((3, 96), (5, 128))),
     "ssd": (_run_ssd, ("float32",), ((3, 96),)),
+    # chain-fusion differentials: fused == unfused == oracle. ssd shapes
+    # pick nc = 2 and nc = 3 chunks — odd nc has no valid phase-B linrec
+    # config, so fuse=0 crosses the XLA fallback while fuse=1 stays fused
+    "ssd_fused": (_run_ssd_fused, ("float32",), ((3, 256), (5, 384))),
     "rglru": (_run_rglru, ("float32",), ((3, 96), (5, 128))),
+    "rglru_fused": (_run_rglru_fused, ("float32",), ODD_BATCH_SHAPES),
     "attention": (_run_attention, ("float32",), ((3, 192), (5, 256))),
 }
 

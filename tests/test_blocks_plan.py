@@ -74,9 +74,10 @@ def test_plan_invariants_over_valid_space(wl):
             assert math.prod(plan.stages) >= plan.n
         # valid configs fit the budget the spaces enforce
         assert plan.vmem_bytes <= V5E.vmem_budget * 2
-        # HBM pass count == launch count for pallas-backed plans
+        # HBM pass count == launch count + the chain's XLA links for
+        # pallas-backed plans (rglru's unfused gate is an XLA pass)
         if plan.launches:
-            assert plan.passes == len(plan.launches)
+            assert plan.passes == len(plan.launches) + plan.xla_passes
         assert plan.seq_tiles >= 1 and plan.grid_size >= 1
         res = plan.resources()
         assert res["passes"] == plan.passes
@@ -291,6 +292,94 @@ def test_lf_multipass_matches_lf():
     got = np.asarray(ops.lf_solve_multipass(a, b, c, d, use_pallas=True,
                                             interpret=True))
     np.testing.assert_allclose(got, base, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Chain plans: op sequences staged as one plan
+# ---------------------------------------------------------------------------
+
+def test_chain_plans_check_clean_over_valid_spaces():
+    from repro.hw.profiles import get_profile
+    from repro.kernels.blocks.plan import plan_for_chain
+    spec = get_profile("tpu_v5e")
+    for wl in (Workload(op="rglru", n=256, batch=32),
+               Workload(op="ssd", n=512, batch=16, variant="chunked")):
+        space = build_space(wl)
+        assert any(c.get("fuse") for c in space.enumerate_valid())
+        for cfg in space.enumerate_valid():
+            norm = normalizer_for(wl.op)(cfg, wl, None)
+            chain = plan_for_chain(wl, dict(cfg, **norm)
+                                   if wl.op == "rglru" else cfg)
+            assert chain.check(spec) == []
+            # chain launches are exactly the plan's, chain passes the
+            # plan's total (kernel passes + XLA links)
+            assert tuple(chain.launches) == tuple(chain.plan.launches)
+            assert chain.passes + chain.plan.xla_passes == chain.plan.passes \
+                or chain.passes == chain.plan.passes
+
+
+def test_rglru_chain_fuse_folds_gate_link():
+    from repro.kernels.blocks.plan import plan_for_chain
+    wl = Workload(op="rglru", n=256, batch=32)
+    cfg = {"tile_n": 128, "rows_per_program": 8, "radix": 2}
+    unfused = plan_for_chain(wl, dict(cfg, fuse=0))
+    fused = plan_for_chain(wl, dict(cfg, fuse=1))
+    assert [l.kind for l in unfused.links] == ["xla", "pallas"]
+    assert [l.kind for l in fused.links] == ["fused", "pallas"]
+    assert unfused.plan.xla_passes == 1 and fused.plan.xla_passes == 0
+    assert fused.plan.passes == unfused.plan.passes - 1
+
+
+def test_ssd_chain_fuse_collapses_phases():
+    from repro.kernels.blocks.plan import plan_for_chain
+    wl = Workload(op="ssd", n=512, batch=16, variant="chunked")
+    cfg = {"tile_n": 128, "radix": 2}
+    unfused = plan_for_chain(wl, dict(cfg, fuse=0), dims=(8, 16))
+    fused = plan_for_chain(wl, dict(cfg, fuse=1), dims=(8, 16))
+    assert [l.name for l in unfused.links] == ["intra", "linrec", "apply"]
+    assert unfused.plan.kind == "three-phase" and unfused.passes == 3
+    assert fused.plan.kind == "two-phase" and fused.passes == 2
+    assert len(fused.launches) < len(unfused.launches)
+
+
+def test_ssd_chain_odd_chunk_count_models_xla_fallback():
+    """nc = 3 has no valid linrec space config; the unfused chain's middle
+    link must be an XLA link (mirroring driver._linrec_space_valid), while
+    the fused chain's sequential carry needs no fallback."""
+    from repro.kernels.blocks.plan import plan_for_chain
+    wl = Workload(op="ssd", n=384, batch=16, variant="chunked")
+    unfused = plan_for_chain(wl, {"tile_n": 128, "fuse": 0}, dims=(8, 16))
+    assert [l.kind for l in unfused.links] == ["pallas", "xla", "pallas"]
+    fused = plan_for_chain(wl, {"tile_n": 128, "fuse": 1}, dims=(8, 16))
+    assert [l.kind for l in fused.links] == ["pallas", "fused", "pallas"]
+    assert len(fused.launches) == 2
+
+
+def test_multipass_carry_unroll_clamped_at_extreme_seq_tiles():
+    """Satellite fix: the workload-tuned unroll rides into the carry scan
+    (l2) whose tile length is seq_tiles, not tile_n — at extreme
+    seq_tiles/unroll combinations the driver must clamp, and the executed
+    launches must still match the plan."""
+    import jax.numpy as jnp
+
+    from repro.kernels.scan.ref import scan_add_ref
+    rng = np.random.default_rng(6)
+    for tile, unroll in ((256, 8), (512, 8), (256, 4)):
+        wl = Workload(op="scan", n=1024, batch=8, variant="ks")
+        cfg = {"tile_n": tile, "rows_per_program": 8, "radix": 2,
+               "unroll": unroll, "in_register": 0}
+        plan = build_plan(wl, cfg, seq_limit=1)
+        assert plan.kind == "multipass"
+        assert plan.seq_tiles < unroll * 2   # the extreme corner
+        x = jnp.asarray(rng.normal(size=(8, 1024)), jnp.float32)
+        with driver.capture_launches() as rec:
+            got = driver.multipass_scan_add(x, plan, unroll=unroll,
+                                            interpret=True)
+        assert [l.name for l in rec] == [l.name for l in plan.launches]
+        assert [l.grid for l in rec] == [l.grid for l in plan.launches]
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(scan_add_ref(x)),
+                                   rtol=2e-5, atol=2e-4)
 
 
 # ---------------------------------------------------------------------------
