@@ -36,7 +36,11 @@ def _make_engine(model, params, tuned: bool, *, max_batch: int, budget: int):
     from repro.serve.engine import ServeEngine
     from repro.tuning import OnlineTuner, TunerSession, attach
 
-    engine = ServeEngine(model, params, max_batch=max_batch, max_len=128)
+    # harvest_every=1 on BOTH arms: a listener forces the tuned engine to
+    # sync every step, so the plain engine must match that cadence or the
+    # comparison measures async batching, not hook cost
+    engine = ServeEngine(model, params, max_batch=max_batch, max_len=128,
+                         harvest_every=1)
     tuner = None
     if tuned:
         wl = Workload(op="attention", n=128, batch=max_batch,

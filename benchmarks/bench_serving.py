@@ -1,0 +1,219 @@
+"""Serving throughput: the optimized engine vs the replay baseline.
+
+Replays one seeded multi-tenant trace (Poisson arrivals over three tenant
+classes — see :mod:`repro.serve.trace`) through both engines built from
+the same model/params:
+
+  * reference — the seed's per-token replay prefill + host-loop decode
+    (:class:`~repro.serve.reference.ReferenceEngine`);
+  * optimized — single-dispatch chunked prefill, donated on-device decode
+    with batched lazy harvest, threshold-batched admission
+    (:class:`~repro.serve.engine.ServeEngine`).
+
+Gates:
+
+  * **throughput** — the optimized engine must serve >= 3x the reference's
+    tokens/sec on the full trace (wall-clock: skipped in ``--smoke`` runs
+    and under ``--no-assert``, shared CI runners are too noisy to gate);
+  * **dispatch** — total prefill device calls <= sum over requests of
+    ceil((prompt_len-1)/chunk), i.e. the O(prompt_len) replay is really
+    gone (structural: always asserted);
+  * **host sync** — at most one device->host transfer per engine step
+    (structural: always asserted);
+  * **fleet prior** — a replica warm-started from fleet journals reaches
+    its incumbent with strictly fewer trial measurements than a cold
+    replica on the same traffic (deterministic replay: always asserted).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --json BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+MIN_SPEEDUP = 3.0       # tokens/sec gate, optimized vs reference
+PREFILL_CHUNK = 16
+ADMIT_THRESHOLD = 4
+
+
+def _serve_trace(engine, trace):
+    """Submit the whole trace, drain it, return (tokens, seconds, done)."""
+    for req in trace:
+        engine.submit(req.prompt, max_new_tokens=req.max_new_tokens)
+    t0 = time.perf_counter()
+    done = engine.run(max_steps=200_000)
+    dt = time.perf_counter() - t0
+    return sum(len(r.output) for r in done), dt, done
+
+
+def _throughput_rows(emit, model, cfg, params, *, seed, smoke):
+    from repro.serve import (ReferenceEngine, ServeEngine, default_tenants,
+                             synthetic_trace, trace_summary)
+
+    horizon = 10 if smoke else 40
+    trace = synthetic_trace(default_tenants(), horizon=horizon,
+                            vocab=cfg.vocab, seed=seed)
+    summary = trace_summary(trace)
+    emit(f"serving,trace,requests,{summary['requests']}")
+    emit(f"serving,trace,prompt_tokens,{summary['prompt_tokens']}")
+    emit(f"serving,trace,decode_tokens,{summary['decode_tokens']}")
+
+    eng = ServeEngine(model, params, max_batch=8, max_len=128,
+                      prefill_chunk=PREFILL_CHUNK,
+                      admit_threshold=ADMIT_THRESHOLD)
+    eng.warmup()
+    ref = ReferenceEngine(model, params, max_batch=8, max_len=128)
+    # warm the reference's jitted decode outside the timed window too
+    ref.submit(np.asarray([1, 2], np.int32), max_new_tokens=2)
+    ref.run()
+    ref.completed.clear()
+
+    new_toks, new_dt, _ = _serve_trace(eng, trace)
+    ref_toks, ref_dt, _ = _serve_trace(ref, trace)
+    assert new_toks == ref_toks, "engines decoded different token counts"
+
+    new_tps = new_toks / max(new_dt, 1e-9)
+    ref_tps = ref_toks / max(ref_dt, 1e-9)
+    speedup = new_tps / max(ref_tps, 1e-9)
+    emit(f"serving,reference,tokens_per_s,{ref_tps:.1f}")
+    emit(f"serving,optimized,tokens_per_s,{new_tps:.1f}")
+    emit(f"serving,speedup,x,{speedup:.2f}")
+
+    failures = []
+    dispatch_bound = sum(
+        math.ceil((len(r.prompt) - 1) / PREFILL_CHUNK) for r in trace)
+    emit(f"serving,optimized,prefill_calls,{eng.prefill_calls}")
+    emit(f"serving,optimized,prefill_call_bound,{dispatch_bound}")
+    if eng.prefill_calls > dispatch_bound:
+        failures.append(
+            f"serving dispatch gate: {eng.prefill_calls} prefill calls > "
+            f"per-request bound {dispatch_bound}")
+    steps = eng._step_index
+    emit(f"serving,optimized,steps,{steps}")
+    emit(f"serving,optimized,host_transfers,{eng.host_transfers}")
+    if eng.host_transfers > steps:
+        failures.append(
+            f"serving sync gate: {eng.host_transfers} host transfers over "
+            f"{steps} steps (> 1 per step)")
+    return speedup, failures
+
+
+def _fleet_rows(emit, *, seed):
+    """Deterministic fleet-prior gate via trace replay (no live engine)."""
+    from repro.core.space import Workload, build_space
+    from repro.tuning import (OnlineTuner, ReplayTrace, TunerSession,
+                              measurements_to_incumbent, replay, warm_tuner)
+    from repro.tuning.online import ranked_candidates
+    from repro.tuning.sweep import config_key
+
+    wl = Workload(op="scan", n=512, batch=2**17, variant="lf")
+    root = tempfile.mkdtemp(prefix="bench_serving_fleet_")
+    session = TunerSession(db_path=os.path.join(root, "db.json"))
+    space = build_space(wl)
+    prior = session.resolve_raw(wl)
+    cands = ranked_candidates(space, 8, exclude=(config_key(prior),))
+    best = cands[3]
+    rng = np.random.default_rng(seed)
+
+    def traffic(rep_seed):
+        trace = ReplayTrace(wl, source="serve")
+        del rep_seed
+        for cfg, ms in [(prior, 2.0)] + [
+                (c, 1.0 if i == 3 else 2.4) for i, c in enumerate(cands)]:
+            for _ in range(40):
+                trace.add(cfg, ms * 1e-3 * (1 + 0.05 * rng.uniform(-1, 1)))
+        return trace
+
+    dirs = []
+    for i in range(2):
+        d = os.path.join(root, f"replica{i}")
+        dirs.append(d)
+        tuner = OnlineTuner(wl, session, budget=64, store=False,
+                            journal_dir=d, source="serve")
+        replay(tuner, traffic(i))
+
+    cold = OnlineTuner(wl, session, budget=64, store=False, source="serve")
+    replay(cold, traffic(10))
+    warm = warm_tuner(wl, dirs, session, source="serve", budget=64,
+                      store=False)
+    replay(warm, traffic(11))
+    cold_cost = measurements_to_incumbent(cold)
+    warm_cost = measurements_to_incumbent(warm)
+    emit(f"serving,fleet,cold_measurements_to_incumbent,{cold_cost}")
+    emit(f"serving,fleet,warm_measurements_to_incumbent,{warm_cost}")
+
+    failures = []
+    if cold.result().best_config != best or warm.result().best_config != best:
+        failures.append("serving fleet gate: replicas did not converge on "
+                        "the known-best config")
+    if not (warm_cost < cold_cost):
+        failures.append(
+            f"serving fleet gate: warm start spent {warm_cost} trial "
+            f"measurements vs cold {cold_cost} (must be strictly fewer)")
+    return failures
+
+
+def run(emit, *, seed: int = 0, smoke: bool = False,
+        wallclock_gate: bool = True):
+    """Returns a list of gate-failure strings (empty = all gates pass)."""
+    from repro.configs.base import get_arch
+    from repro.models.model import build_model
+
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    speedup, failures = _throughput_rows(emit, model, cfg, params,
+                                         seed=seed, smoke=smoke)
+    if wallclock_gate and not smoke and speedup < MIN_SPEEDUP:
+        failures.append(
+            f"serving throughput gate: {speedup:.2f}x < {MIN_SPEEDUP:.0f}x "
+            f"tokens/sec over the replay baseline")
+    failures += _fleet_rows(emit, seed=seed)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_serving.json summary")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced trace for CI smoke runs (wall-clock gate "
+                         "reported, not asserted)")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="record the wall-clock speedup without gating on "
+                         "it (noisy shared runners); structural gates "
+                         "still assert")
+    args = ap.parse_args()
+    rows = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    failures = run(emit, seed=args.seed, smoke=args.smoke,
+                   wallclock_gate=not args.no_assert)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serving", "seed": args.seed,
+                       "smoke": bool(args.smoke), "rows": rows,
+                       "gate_failures": failures},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
+    for failure in failures:
+        print(f"# FAIL: {failure}")
+    if failures:
+        raise SystemExit(1)
+    print("# acceptance ok: serving gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,12 @@ Prints ``name,...`` CSV rows:
   fusion              — fused vs unfused chain execution per chain
       (the BENCH_fusion gate: the fused arm must save a planned HBM pass
       on both chains, conform to its chain plan's launch list, and beat
-      unfused wall clock on rglru).
+      unfused wall clock on rglru);
+  serving             — multi-tenant trace through the optimized serving
+      engine vs the per-token replay baseline (the BENCH_serving gates:
+      >= 3x tokens/sec on full runs, prefill dispatches and host
+      transfers structurally bounded, fleet warm start strictly cheaper
+      than cold).
 
 ``--seed`` flows into every stochastic section so CI runs are
 reproducible; ``--json-dir`` writes one BENCH_<SECTION>.json per section
@@ -43,7 +48,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: prefix_ops,convergence,roofline,"
                          "resolve,blocks,sweep,ml_predict,online,transfer,"
-                         "pareto,analysis,fusion")
+                         "pareto,analysis,fusion,serving")
     ap.add_argument("--no-host-wallclock", action="store_true")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the stochastic sections (reproducible CI)")
@@ -108,6 +113,9 @@ def main() -> None:
     if begin("fusion"):
         from benchmarks.bench_fusion import run as run_fusion
         gate_failures += run_fusion(emit, seed=args.seed, smoke=args.smoke)
+    if begin("serving"):
+        from benchmarks.bench_serving import run as run_serving
+        gate_failures += run_serving(emit, seed=args.seed, smoke=args.smoke)
 
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)

@@ -17,7 +17,12 @@ but nothing previously enforced:
     ``launch/serve.py``) must use the injectable clock
     (``ServeEngine.step_timer`` / the online tuner's ``StepTimer``) so
     tests can fake time; calling ``time.time()`` / ``time.perf_counter()``
-    directly makes the path untestable.
+    directly makes the path untestable.  The ``serve/`` scope covers the
+    whole serving package — the optimized engine, the replay
+    :mod:`~repro.serve.reference` baseline, and the
+    :mod:`~repro.serve.trace` generator — where the only blessed clock
+    use is the bare ``time.perf_counter`` *reference* as the
+    ``step_timer`` default (a call would be flagged).
   * ``ast.objective-batch-eval`` — vector objectives override
     ``batch_eval_metrics`` (``batch_eval`` derives from it); overriding
     only ``batch_eval`` silently drops the energy/VMEM columns.

@@ -29,7 +29,8 @@ from repro.configs.base import get_arch
 from repro.core.space import Workload
 from repro.models.model import build_model
 from repro.serve.engine import ServeEngine
-from repro.tuning import OnlineTuner, TraceRecorder, attach, default_session
+from repro.tuning import (OnlineTuner, TraceRecorder, attach,
+                          default_session, warm_tuner)
 
 
 def main() -> None:
@@ -40,6 +41,23 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max tokens per prefill dispatch (pow2-quantized "
+                         "chunks bound jit retraces)")
+    ap.add_argument("--admit-threshold", type=int, default=1,
+                    help="hold admissions until this many slots free so "
+                         "co-admitted prompts share prefill scans "
+                         "(1 = eager/latency-first)")
+    ap.add_argument("--harvest-every", type=int, default=4,
+                    help="decode steps batched per device->host token "
+                         "harvest when untimed")
+    ap.add_argument("--max-prefill-tokens", type=int, default=None,
+                    help="per-engine-step prefill token budget so long "
+                         "prompts cannot starve active decoders")
+    ap.add_argument("--fleet-dirs", default=None,
+                    help="comma list of fleet replica journal dirs: "
+                         "warm-start the online tuner from the fleet "
+                         "consensus (implies --online-tune)")
     ap.add_argument("--online-tune", action="store_true",
                     help="attach an OnlineTuner to the decode step hooks")
     ap.add_argument("--tune-op", default="attention",
@@ -65,20 +83,30 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, max_batch=args.max_batch,
-                         max_len=args.max_len)
+                         max_len=args.max_len,
+                         prefill_chunk=args.prefill_chunk,
+                         admit_threshold=args.admit_threshold,
+                         harvest_every=args.harvest_every,
+                         max_prefill_tokens=args.max_prefill_tokens)
 
     tuner = None
     recorder = None
-    if args.online_tune or args.record_trace:
+    if args.online_tune or args.record_trace or args.fleet_dirs:
         wl = Workload(op=args.tune_op, n=args.max_len,
                       batch=args.max_batch, variant=args.tune_variant)
         if args.record_trace:
             recorder = TraceRecorder(args.record_trace, wl)
-        if args.online_tune:
-            tuner = OnlineTuner(wl, default_session(),
-                                budget=args.tune_budget,
-                                guard_band=args.guard_band,
-                                journal_dir=args.journal_dir)
+        if args.online_tune or args.fleet_dirs:
+            kwargs = dict(budget=args.tune_budget,
+                          guard_band=args.guard_band,
+                          journal_dir=args.journal_dir)
+            if args.fleet_dirs:
+                # warm start: prior = fleet consensus winner, trial queue =
+                # fleet runner-ups (falls back to cold when dirs are empty)
+                tuner = warm_tuner(wl, args.fleet_dirs.split(","),
+                                   default_session(), **kwargs)
+            else:
+                tuner = OnlineTuner(wl, default_session(), **kwargs)
             attach(engine, tuner, recorder=recorder)
         else:
             # --record-trace alone is PASSIVE: time the incumbent config
@@ -100,8 +128,14 @@ def main() -> None:
     done = engine.run(max_steps=10_000)
     dt = engine.step_timer() - t0
     toks = sum(len(r.output) for r in done)
+    reasons = {}
+    for r in done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s)")
+          f"({toks/dt:.1f} tok/s, prefill_calls={engine.prefill_calls}, "
+          f"host_transfers={engine.host_transfers})")
+    print("[serve] finish reasons: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(reasons.items())))
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4].tolist()} "
               f"-> out[:8]={r.output[:8]}")

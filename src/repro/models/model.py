@@ -411,6 +411,37 @@ class Model:
         logits = L.unembed(params["embed"], x, cfg.logits_softcap)
         return logits, new_cache
 
+    # --- bulk prompt ingestion (single-dispatch prefill) ---
+    def prefill(self, params, tokens: jax.Array, cache: PyTree,
+                positions: jax.Array, write_mask: jax.Array) -> PyTree:
+        """Bulk-write a block of prompt tokens into the decode cache.
+
+        ``tokens``/``positions``/``write_mask``: (steps, batch) time-major.
+        Scans :meth:`decode_step` over the leading axis inside one traced
+        computation, so a whole prompt chunk lands in the cache in a single
+        device dispatch.  ``write_mask[t, b]`` selects, per step and lane,
+        whether lane ``b``'s cache advances at step ``t``; masked-off lanes
+        keep their cache/state **bit-exactly** (their decode_step output is
+        discarded), which is what lets lanes with different prompt lengths
+        — and lanes that are mid-decode or empty — ride along as padding
+        work without cross-request state pollution.  Per-lane results are
+        bit-identical to replaying the same (token, position) sequence
+        through :meth:`decode_step` one step at a time.  Logits are never
+        materialized.
+        """
+        def body(c, inp):
+            tok, pos, write = inp
+            _, c_new = self.decode_step(params, tok[:, None], c,
+                                        pos[:, None])
+            merged = jax.tree.map(
+                lambda n, o: jnp.where(
+                    write.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+                c_new, c)
+            return merged, None
+        cache, _ = jax.lax.scan(body, cache,
+                                (tokens, positions, write_mask))
+        return cache
+
 
 def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

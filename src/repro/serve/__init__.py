@@ -1,0 +1,20 @@
+"""repro.serve — throughput-first continuous-batching serving.
+
+:class:`ServeEngine` is the production path: single-dispatch batched
+prefill, a donated on-device decode loop, and budgeted deque admission
+(docs/serving.md).  :class:`ReferenceEngine` preserves the per-token
+replay baseline the engine is differentially tested and benchmarked
+against; :mod:`repro.serve.trace` generates the seeded multi-tenant
+request streams the serving benchmark gates on.
+"""
+from repro.serve.engine import (FINISH_LENGTH, FINISH_STOP, Request,
+                                ServeEngine, StepRecord)
+from repro.serve.reference import ReferenceEngine
+from repro.serve.trace import (TenantSpec, TraceRequest, default_tenants,
+                               synthetic_trace, trace_summary)
+
+__all__ = [
+    "FINISH_LENGTH", "FINISH_STOP", "Request", "ServeEngine", "StepRecord",
+    "ReferenceEngine", "TenantSpec", "TraceRequest", "default_tenants",
+    "synthetic_trace", "trace_summary",
+]

@@ -43,8 +43,9 @@ from repro.tuning.sweep import (SweepJournal, SweepResult, config_key,
 # `from repro.tuning import OnlineTuner` working without the eager cost.
 _ONLINE_EXPORTS = frozenset((
     "OnlineTuner", "OnlineWallClockObjective", "ReplayTrace", "StepTimer",
-    "TraceRecorder", "attach", "online_search", "replay",
-    "replay_candidates"))
+    "TraceRecorder", "aggregate_fleet", "attach", "fleet_prior",
+    "measurements_to_incumbent", "online_search", "promote_fleet_winner",
+    "replay", "replay_candidates", "warm_tuner"))
 
 
 def __getattr__(name: str):

@@ -698,3 +698,118 @@ def online_search(space: SearchSpace, objective: Objective, *, seed: int = 0,
     if not tuner.finished:
         tuner._stop("budget")
     return tuner.result()
+
+
+# ---------------------------------------------------------------------------
+# Fleet priors: aggregate replica journals into one warm start
+# ---------------------------------------------------------------------------
+
+def aggregate_fleet(journal_dirs: Sequence[str], wl: Workload, *,
+                    source: str = "serve", min_replicas: int = 1,
+                    ) -> Dict[str, Tuple[Config, float, int]]:
+    """Merge per-replica online journals into fleet-wide config estimates.
+
+    Each serving replica streams its in-traffic EWMAs to its own journal
+    directory (``OnlineTuner(journal_dir=...)``); a fleet is just a list
+    of those directories on shared storage.  This reads every replica's
+    journal for ``wl`` under the online objective identity and merges
+    per config: the fleet estimate is the mean of the replicas' final
+    EWMAs (journal entries are last-wins per config, so each replica
+    contributes at most one number per config).  Configs measured by
+    fewer than ``min_replicas`` replicas are dropped — one replica's
+    fluke cannot steer the fleet.
+
+    Returns ``{config_key: (config, mean_seconds, replicas)}``.
+    """
+    wl = wl.canonical()
+    identity = OnlineWallClockObjective({}, source=source)
+    merged: Dict[str, Tuple[Config, List[float]]] = {}
+    for d in journal_dirs:
+        journal = SweepJournal.for_workload(d, wl, identity)
+        for cfg, t in journal.entries():
+            _, ts = merged.setdefault(config_key(cfg), (dict(cfg), []))
+            ts.append(float(t))
+    return {key: (cfg, sum(ts) / len(ts), len(ts))
+            for key, (cfg, ts) in merged.items()
+            if len(ts) >= max(min_replicas, 1)}
+
+
+def fleet_prior(journal_dirs: Sequence[str], wl: Workload, *,
+                source: str = "serve", min_replicas: int = 1,
+                ) -> Tuple[Optional[Config], List[Config]]:
+    """Fleet-aggregated warm start: ``(winner, runner-up candidates)``.
+
+    The winner is the config with the best fleet-mean latency; the other
+    measured configs follow ordered by their fleet means, so a fresh
+    replica trials the fleet's runner-ups first instead of re-deriving
+    the queue analytically.  ``(None, [])`` when no journal has data.
+    """
+    agg = aggregate_fleet(journal_dirs, wl, source=source,
+                          min_replicas=min_replicas)
+    if not agg:
+        return None, []
+    ranked = sorted(agg.values(), key=lambda item: item[1])
+    return dict(ranked[0][0]), [dict(cfg) for cfg, _, _ in ranked[1:]]
+
+
+def promote_fleet_winner(session, wl: Workload, journal_dirs: Sequence[str],
+                         *, source: str = "serve", min_replicas: int = 1,
+                         ) -> Optional[Tuple[Config, float, int]]:
+    """Store the fleet's best config in the TuningDB (``method="fleet"``).
+
+    The stored record seeds ``session.resolve_raw`` for every future
+    engine on this device even with no fleet journal in reach.  Like
+    ``method="online"``, ``"fleet"`` stays outside the exhaustive dataset
+    allowlist — a traffic consensus is not a sweep optimum.  Returns the
+    ``(config, mean_seconds, replicas)`` stored, or ``None`` when no
+    journal has enough data to promote.
+    """
+    wl = wl.canonical()
+    agg = aggregate_fleet(journal_dirs, wl, source=source,
+                          min_replicas=min_replicas)
+    if not agg:
+        return None
+    cfg, t, replicas = min(agg.values(), key=lambda item: item[1])
+    session.db.store(wl, cfg, float(t), "fleet", replicas)
+    session.invalidate(wl)
+    return dict(cfg), float(t), int(replicas)
+
+
+def warm_tuner(wl: Workload, journal_dirs: Sequence[str], session=None, *,
+               source: str = "serve", min_replicas: int = 1,
+               **tuner_kwargs) -> OnlineTuner:
+    """An :class:`OnlineTuner` warm-started from fleet journals.
+
+    The fleet winner becomes the prior — the new replica serves the
+    consensus config from its very first step — and the fleet's
+    runner-ups, ordered by their measured means, become the trial queue.
+    With no usable fleet data this falls back to the normal cold start
+    (session prior + analytically-ranked queue), so callers can pass the
+    fleet directories unconditionally.
+    """
+    prior, candidates = fleet_prior(journal_dirs, wl, source=source,
+                                    min_replicas=min_replicas)
+    if prior is None:
+        return OnlineTuner(wl, session, source=source, **tuner_kwargs)
+    return OnlineTuner(wl, session, prior=prior, candidates=candidates,
+                       source=source, **tuner_kwargs)
+
+
+def measurements_to_incumbent(tuner: OnlineTuner) -> int:
+    """Trial samples spent before the tuner's final incumbent went live.
+
+    The fleet-prior gate metric: a replica warm-started on the fleet
+    winner pays zero (or few) trial samples before serving it; a cold
+    replica pays for every trial through the winning promotion.
+    Superseded incumbents' samples are incumbent-time serving, not trial
+    spend, and are excluded.
+    """
+    spent = 0
+    answer = 0
+    for rec in tuner.trials:
+        if rec.state == SUPERSEDED:
+            continue
+        spent += rec.samples
+        if rec.state == INCUMBENT:
+            answer = spent
+    return answer

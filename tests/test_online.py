@@ -6,7 +6,9 @@ import pytest
 from repro.core import TPUCostModelObjective, Workload, build_space
 from repro.core.objective import CachedObjective, PENALTY_TIME
 from repro.tuning import (OnlineTuner, ReplayTrace, TunerSession,
-                          online_search, replay)
+                          aggregate_fleet, fleet_prior,
+                          measurements_to_incumbent, online_search,
+                          promote_fleet_winner, replay, warm_tuner)
 from repro.tuning.online import (EwmaTracker, INCUMBENT, ROLLED_BACK,
                                  ranked_candidates)
 from repro.tuning.sweep import SweepJournal, config_key
@@ -363,3 +365,122 @@ def test_incumbent_state_transitions(tmp_path):
     assert tuner.incumbent.config == best
     promoted = [t for t in tuner.trials if t.state == INCUMBENT]
     assert promoted and promoted[-1] is tuner.incumbent
+
+
+# ---------------------------------------------------------------------------
+# Fleet priors: replica journal aggregation + warm start
+# ---------------------------------------------------------------------------
+
+def _run_replica(session, journal_dir, *, seed, candidates=None):
+    """One fleet replica: replay live traffic, streaming EWMAs to its own
+    journal directory."""
+    trace, prior, best = _trace_with_best(session, jitter=0.05, seed=seed)
+    tuner = OnlineTuner(WL, session, budget=64, store=False,
+                        candidates=candidates,
+                        journal_dir=journal_dir, source="test")
+    replay(tuner, trace)
+    return tuner, prior, best
+
+
+def test_fleet_aggregation_merges_replica_journals(tmp_path):
+    """Three replicas with jittered traffic: the fleet estimate for each
+    config is the mean of the replicas' final EWMAs, tagged with how many
+    replicas measured it."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    dirs = [str(tmp_path / f"replica{i}") for i in range(3)]
+    best = None
+    for i, d in enumerate(dirs):
+        _, _, best = _run_replica(session, d, seed=i)
+    agg = aggregate_fleet(dirs, WL, source="test")
+    assert agg
+    bk = config_key(best)
+    assert bk in agg
+    cfg, mean_s, replicas = agg[bk]
+    assert cfg == best and replicas == 3
+    assert mean_s == pytest.approx(1e-3, rel=0.2)    # best_ms with jitter
+    # the winner by fleet mean is the trace's known-best config
+    assert min(agg.values(), key=lambda it: it[1])[0] == best
+
+
+def test_fleet_min_replicas_filters_single_replica_flukes(tmp_path):
+    """A config only one replica ever measured is dropped when the caller
+    demands fleet-wide evidence."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    space = build_space(WL)
+    prior = session.resolve_raw(WL)
+    cands = ranked_candidates(space, 8, exclude=(config_key(prior),))
+    best, extra = cands[3], cands[5]
+    dirs = [str(tmp_path / "a"), str(tmp_path / "b")]
+    _run_replica(session, dirs[0], seed=0, candidates=[best])
+    _run_replica(session, dirs[1], seed=1, candidates=[best, extra])
+
+    loose = aggregate_fleet(dirs, WL, source="test", min_replicas=1)
+    strict = aggregate_fleet(dirs, WL, source="test", min_replicas=2)
+    assert config_key(extra) in loose
+    assert config_key(extra) not in strict           # one-replica fluke
+    assert config_key(best) in strict                # both replicas agree
+    winner, ranked = fleet_prior(dirs, WL, source="test", min_replicas=2)
+    assert winner == best
+    assert all(config_key(c) != config_key(extra) for c in ranked)
+
+
+def test_fleet_warm_tuner_beats_cold_start(tmp_path):
+    """The acceptance gate: a fresh replica warm-started from the fleet
+    journals reaches its final incumbent with strictly fewer trial
+    measurements than a cold replica on the same traffic."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    dirs = [str(tmp_path / f"replica{i}") for i in range(2)]
+    for i, d in enumerate(dirs):
+        _run_replica(session, d, seed=i)
+
+    trace, prior, best = _trace_with_best(session, jitter=0.05, seed=9)
+    cold = OnlineTuner(WL, session, budget=64, store=False, source="test")
+    replay(cold, trace)
+    warm = warm_tuner(WL, dirs, session, source="test", budget=64,
+                      store=False)
+    # the warm replica serves the fleet consensus from its first step
+    assert warm.config() == best
+    replay(warm, trace)
+
+    assert cold.result().best_config == best
+    assert warm.result().best_config == best
+    cold_cost = measurements_to_incumbent(cold)
+    warm_cost = measurements_to_incumbent(warm)
+    assert cold_cost > 0                  # cold paid trials to find it
+    assert warm_cost < cold_cost          # warm started on it (usually 0)
+
+
+def test_promote_fleet_winner_seeds_session(tmp_path):
+    """Promotion stores the fleet winner under method="fleet" and the
+    session resolves it for every future engine — while the exhaustive
+    dataset allowlist keeps ignoring traffic-derived entries."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    dirs = [str(tmp_path / f"replica{i}") for i in range(2)]
+    for i, d in enumerate(dirs):
+        _, _, best = _run_replica(session, d, seed=i)
+
+    promoted = promote_fleet_winner(session, WL, dirs, source="test")
+    assert promoted is not None
+    cfg, mean_s, replicas = promoted
+    assert cfg == best and replicas == 2 and mean_s > 0
+    assert session.resolve_raw(WL) == best           # DB hit, not analytical
+    entry = next(e for e in session.db.entries().values()
+                 if e["config"] == best)
+    assert entry["method"] == "fleet"
+    # a fresh OnlineTuner on this session now cold-starts on the winner
+    fresh = OnlineTuner(WL, session, budget=8, store=False, source="test")
+    assert fresh.config() == best
+
+
+def test_fleet_empty_journals_fall_back_to_cold_start(tmp_path):
+    """No fleet data (empty/missing journal dirs): warm_tuner degrades to
+    the normal session prior + analytical queue, so callers can pass the
+    fleet directories unconditionally."""
+    session = TunerSession(db_path=str(tmp_path / "db.json"))
+    dirs = [str(tmp_path / "nothing-here")]
+    assert aggregate_fleet(dirs, WL, source="test") == {}
+    assert fleet_prior(dirs, WL, source="test") == (None, [])
+    assert promote_fleet_winner(session, WL, dirs, source="test") is None
+    tuner = warm_tuner(WL, dirs, session, source="test", budget=8,
+                       store=False)
+    assert tuner.config() == session.resolve_raw(WL)

@@ -239,3 +239,69 @@ def test_single_token_prompt(small_model):
         out.append(cur)
         pos += 1
     assert out == done[0].output
+
+
+def test_finish_reason_stop_vs_length(small_model):
+    """finish_reason distinguishes a natural budget stop from hitting the
+    context-length ceiling."""
+    cfg, model, params = small_model
+    from repro.serve.engine import FINISH_LENGTH, FINISH_STOP
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=64)
+    eng.submit(np.asarray([3, 1, 4], np.int32), max_new_tokens=5)
+    done = eng.run()
+    assert done[0].finish_reason == FINISH_STOP
+    assert len(done[0].output) == 5
+
+    # prompt fills 10 of 16 positions; the lane runs out of context after
+    # 6 decode steps, long before the 50-token budget
+    eng = ServeEngine(model, params, max_batch=2, max_len=16)
+    eng.submit(np.arange(1, 11, dtype=np.int32), max_new_tokens=50)
+    done = eng.run()
+    assert done[0].finish_reason == FINISH_LENGTH
+    assert len(done[0].output) == 6
+
+
+def test_decode_variant_table_capped(small_model):
+    """A long alternating trial/rollback sequence must not grow the jit
+    table without bound: LRU-capped at max_variants, with the baseline
+    (None) pinned and the current incumbent always resident."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                      max_variants=4)
+    incumbent = {"scan": {"radix": 2}}
+    eng._select_decode_variant(incumbent)
+    incumbent_fn = eng._decode
+
+    for radix in (4, 8, 16, 32, 64, 128):      # six distinct trial frags
+        eng._select_decode_variant({"scan": {"radix": radix}})
+        # rollback to incumbent after every trial, as the tuner does
+        eng._select_decode_variant(incumbent)
+
+    assert len(eng._decode_variants) <= 4
+    assert None in eng._decode_variants        # baseline pinned
+    # incumbent survived every eviction round and is still a cache hit
+    eng._select_decode_variant({"scan": {"radix": 2}})
+    assert eng._decode is incumbent_fn
+    # the engine still serves correctly after evictions
+    eng._select_decode_variant(None)
+    eng.submit(np.asarray([5, 9], np.int32), max_new_tokens=2)
+    assert len(eng.run()[0].output) == 2
+
+
+def test_admit_threshold_batches_admissions(small_model):
+    """admit_threshold holds admissions until enough slots free so prompts
+    share prefill scans; results still arrive in submission order."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, max_batch=4, max_len=64,
+                      prefill_chunk=8, admit_threshold=4)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (9, 5, 8, 3)]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=3)
+    done = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2, 3]
+    assert all(len(r.output) == 3 for r in done)
+    # the whole co-admitted group shared ceil(max(plen-1)/chunk) dispatches
+    assert eng.prefill_calls == 1

@@ -1,0 +1,283 @@
+"""Prefill/replay differential: the optimized engine vs the reference.
+
+The single-dispatch batched prefill and the donated decode loop must be
+*bit-identical* to the seed's per-token replay path, per lane:
+
+* cache differential — after admitting one prompt, the target slot's
+  cache lanes must match the :class:`ReferenceEngine`'s replay bitwise,
+  across model families (dense KV / SSM state / hybrid ring-buffer) and
+  cache dtypes, including odd prompt lengths and chunk-boundary prompts;
+* output differential — full greedy runs must decode bit-identical
+  tokens (and finish reasons).  Configurations are chosen so the
+  *reference* is well-defined: its padding steps advance recurrent/SSM
+  state on every lane (the seed pollution the optimized engine's lane
+  masking removes), so state-carrying archs compare single-request runs
+  and the dense arch compares a no-lane-reuse batch.  MoE archs are
+  excluded outright: expert capacity couples lanes inside a batch, so
+  per-lane bit-identity is not even defined for them.
+
+Also here: the dispatch-count contract (prefill issues ceil(need/chunk)
+device calls, not one per token) and the steady-state host-transfer
+contract (at most one small transfer per decode step, batched every
+``harvest_every`` steps), asserted via a transfer-counting test double.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models.model import build_model
+from repro.serve import ReferenceEngine, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+# (arch, cache dtype) axes for the cache differential; one state-space,
+# one hybrid/ring-buffer, and the dense arch in both cache dtypes
+CACHE_CASES = [
+    ("qwen1.5-0.5b", jnp.float32),
+    ("qwen1.5-0.5b", jnp.bfloat16),
+    ("mamba2-130m", jnp.float32),
+    ("recurrentgemma-9b", jnp.float32),
+]
+
+_BUILT = {}
+
+
+def built(arch: str):
+    """Module-level (cfg, model, params) cache — params are expensive."""
+    if arch not in _BUILT:
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        _BUILT[arch] = (cfg, model, model.init(KEY))
+    return _BUILT[arch]
+
+
+def assert_lane_bitwise_equal(cache_a, cache_b, lane: int) -> None:
+    la = jax.tree.leaves(cache_a)
+    lb = jax.tree.leaves(cache_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        # batch is axis 1 of every cache leaf
+        np.testing.assert_array_equal(np.asarray(a[:, lane]),
+                                      np.asarray(b[:, lane]))
+
+
+# ---------------------------------------------------------------------------
+# Cache differential: batched prefill == per-token replay, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,dtype", CACHE_CASES,
+                         ids=[f"{a}-{jnp.dtype(d).name}"
+                              for a, d in CACHE_CASES])
+@pytest.mark.parametrize("plen", [1, 2, 7, 9, 12])
+def test_prefill_cache_bit_identical_to_replay(arch, dtype, plen):
+    """plen axis: 1 (no prefill at all), 2 (single write), 7 (odd,
+    mid-chunk tail), 9 (exactly chunk+1: a full chunk of writes), 12
+    (chunk boundary + tail) — all with prefill_chunk=8."""
+    cfg, model, params = built(arch)
+    rng = np.random.default_rng(plen)
+    prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+
+    eng = ServeEngine(model, params, max_batch=3, max_len=32,
+                      prefill_chunk=8, cache_dtype=dtype)
+    eng.submit(prompt, max_new_tokens=4)
+    eng._admit()                       # prefill only, no decode steps
+    ref = ReferenceEngine(model, params, max_batch=3, max_len=32,
+                          cache_dtype=dtype)
+    ref.submit(prompt, max_new_tokens=4)
+    ref._admit()
+
+    assert eng.slot_pos[0] == ref.slot_pos[0] == plen - 1
+    assert_lane_bitwise_equal(eng.cache, ref.cache, lane=0)
+    # the dispatch contract: ceil((plen-1)/chunk) device calls, not plen-1
+    assert eng.prefill_calls == math.ceil((plen - 1) / 8)
+
+
+def test_prefill_chunk_one_matches_replay():
+    """chunk=1 degenerates to one dispatch per token — same bits."""
+    cfg, model, params = built("qwen1.5-0.5b")
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                      prefill_chunk=1)
+    eng.submit(prompt)
+    eng._admit()
+    ref = ReferenceEngine(model, params, max_batch=2, max_len=32)
+    ref.submit(prompt)
+    ref._admit()
+    assert eng.prefill_calls == len(prompt) - 1
+    assert_lane_bitwise_equal(eng.cache, ref.cache, lane=0)
+
+
+def test_batched_prefill_group_shares_dispatches():
+    """Co-admitted prompts share the scan: the whole group costs
+    ceil(max(plen-1)/chunk) dispatches, and every lane still matches the
+    reference's per-prompt replay bitwise."""
+    cfg, model, params = built("qwen1.5-0.5b")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (13, 7, 2)]
+
+    eng = ServeEngine(model, params, max_batch=3, max_len=32,
+                      prefill_chunk=4)
+    for p in prompts:
+        eng.submit(p)
+    eng._admit()
+    assert eng.prefill_calls == math.ceil((13 - 1) / 4)   # 3, not 12+6+1
+
+    for lane, p in enumerate(prompts):
+        # reference: each prompt admitted alone into a fresh engine, so
+        # its replay lane is unpolluted by the other admissions
+        ref = ReferenceEngine(model, params, max_batch=3, max_len=32)
+        ref.submit(p)
+        ref._admit()
+        la = jax.tree.leaves(eng.cache)
+        lb = jax.tree.leaves(ref.cache)
+        for a, b in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(a[:, lane]),
+                                          np.asarray(b[:, 0]))
+
+
+# ---------------------------------------------------------------------------
+# Output differential: decoded tokens bit-identical end to end
+# ---------------------------------------------------------------------------
+
+def test_dense_multi_request_outputs_match_reference():
+    """Dense arch, no lane reuse (requests <= slots): the full continuous
+    batching run must emit the reference's tokens exactly."""
+    cfg, model, params = built("qwen1.5-0.5b")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (6, 1, 11, 3)]
+    eng = ServeEngine(model, params, max_batch=4, max_len=64,
+                      prefill_chunk=4)
+    ref = ReferenceEngine(model, params, max_batch=4, max_len=64)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+        ref.submit(p, max_new_tokens=5)
+    de, dr = eng.run(), ref.run()
+    assert [r.output for r in de] == [r.output for r in dr]
+    assert [r.finish_reason for r in de] == [r.finish_reason for r in dr]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "recurrentgemma-9b"])
+def test_state_arch_outputs_match_reference(arch):
+    """State-carrying archs: single-request runs (the reference's padding
+    steps would advance other lanes' state — the seed pollution bug the
+    optimized engine fixes — so multi-lane comparisons are undefined)."""
+    cfg, model, params = built(arch)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+    eng = ServeEngine(model, params, max_batch=1, max_len=32,
+                      prefill_chunk=4)
+    ref = ReferenceEngine(model, params, max_batch=1, max_len=32)
+    eng.submit(prompt, max_new_tokens=6)
+    ref.submit(prompt, max_new_tokens=6)
+    de, dr = eng.run(), ref.run()
+    assert de[0].output == dr[0].output
+    assert de[0].finish_reason == dr[0].finish_reason
+
+
+def test_lane_reuse_does_not_leak_state():
+    """Two tenants through the same slot, one after the other: the second
+    must decode exactly as if it had the engine to itself (the lane is
+    reset on admission; padding steps are lane-masked)."""
+    cfg, model, params = built("mamba2-130m")
+    rng = np.random.default_rng(4)
+    first = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    second = rng.integers(0, cfg.vocab, size=7).astype(np.int32)
+
+    eng = ServeEngine(model, params, max_batch=1, max_len=32,
+                      prefill_chunk=4)
+    eng.submit(first, max_new_tokens=4)
+    eng.submit(second, max_new_tokens=4)
+    reused = {r.rid: r for r in eng.run()}
+
+    solo = ServeEngine(model, params, max_batch=1, max_len=32,
+                       prefill_chunk=4)
+    solo.submit(second, max_new_tokens=4)
+    assert reused[1].output == solo.run()[0].output
+
+
+# ---------------------------------------------------------------------------
+# Host-transfer contract (transfer-counting test double)
+# ---------------------------------------------------------------------------
+
+def test_steady_state_decode_single_transfer_per_step():
+    cfg, model, params = built("qwen1.5-0.5b")
+    eng = ServeEngine(model, params, max_batch=4, max_len=64,
+                      harvest_every=4)
+    fetched = []
+    real_fetch = eng._fetch
+
+    def counting_fetch(x):
+        arr = real_fetch(x)
+        fetched.append(arr.shape)
+        return arr
+
+    eng._fetch = counting_fetch
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+                   max_new_tokens=16)
+    done = eng.run()
+    assert len(done) == 4
+    steps = eng._step_index
+    # hard bound: at most ONE host transfer per decode step...
+    assert len(fetched) <= steps
+    # ...and with no listeners, the harvest batches k steps per transfer
+    assert len(fetched) <= steps // eng.harvest_every + 2
+    # each transfer is the small (k, B, 2) token/finish-code block, never
+    # logits or cache-sized payloads
+    assert all(s[-1] == 2 and s[-2] == 4 for s in fetched)
+    assert eng.host_transfers == len(fetched)
+
+
+def test_timed_engine_harvests_every_step():
+    """With a step listener the harvest is forced inside the timed window
+    (the tuner's samples must cover real device work) — still exactly one
+    transfer per step."""
+    cfg, model, params = built("qwen1.5-0.5b")
+    ticks = iter(range(10_000))
+    eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                      step_timer=lambda: float(next(ticks)))
+    records = []
+    eng.add_step_listener(records.append)
+    eng.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=5)
+    eng.run()
+    assert records
+    assert eng.host_transfers <= eng._step_index
+
+
+# ---------------------------------------------------------------------------
+# Prefill budget: long prompts cannot starve active decoders
+# ---------------------------------------------------------------------------
+
+def test_prefill_budget_lets_decoders_progress():
+    cfg, model, params = built("qwen1.5-0.5b")
+    eng = ServeEngine(model, params, max_batch=2, max_len=128,
+                      prefill_chunk=8, max_prefill_tokens=8,
+                      harvest_every=1)
+    short = np.asarray([5, 3], np.int32)
+    long = np.arange(1, 70, dtype=np.int32) % cfg.vocab
+    eng.submit(short, max_new_tokens=40)
+    eng.run(max_steps=2)               # short is admitted and decoding
+    eng.submit(long, max_new_tokens=2)
+    eng.run(max_steps=4)
+    # the long prompt (68 writes at <= 8/step) is still mid-prefill...
+    assert eng._prefilling
+    # ...while the short request kept emitting a token every step
+    short_req = next(r for r in eng.slot_req if r is not None
+                     and len(r.prompt) == 2)
+    assert len(short_req.output) >= 5
+    done = eng.run(max_steps=10_000)
+    assert len(done) == 2
+
+    # and the budgeted, interleaved prefill decoded the same tokens as an
+    # unconstrained engine given the same prompt
+    solo = ServeEngine(model, params, max_batch=2, max_len=128,
+                       prefill_chunk=8)
+    solo.submit(long, max_new_tokens=2)
+    assert done[1].output == solo.run()[0].output
